@@ -1,0 +1,53 @@
+"""Paper Fig. 4: RBMAT vs B+MAT performance and memory across buffer sizes.
+
+Reports RBMAT normalized to B+MAT (paper convention: lower memory better,
+higher perf better) — reproducing the crossover where the binary layout wins
+small and the fenced layout wins large.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_batches
+from repro.core.bmat import BMAT, BPMAT, RBMAT
+
+
+def run(sizes=(1_000, 10_000, 100_000, 1_000_000), q: int = 4096, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for n in sizes:
+        keys = np.unique(rng.integers(0, 1 << 52, int(n * 1.1)))[:n]
+        vals = keys + 1
+        stats = {}
+        for tname, tt in (("rbmat", RBMAT), ("b+mat", BPMAT)):
+            b = BMAT(tt, fanout=16)
+            for i in range(0, n, 65536):
+                b.merge(keys[i : i + 65536], vals[i : i + 65536])
+            queries = rng.integers(0, 1 << 52, q).astype(np.int64)
+            dt = time_batches(lambda: b.rank(queries), n_iters=7)
+            stats[tname] = {
+                "qps": q / dt,
+                "mem": b.memory_bytes(modeled=True),
+                "height": b.height,
+            }
+        rel_perf = stats["rbmat"]["qps"] / stats["b+mat"]["qps"]
+        rel_mem = stats["rbmat"]["mem"] / stats["b+mat"]["mem"]
+        rows.append(
+            {
+                "name": f"n={n}",
+                "us_per_call": round(1e6 / stats["b+mat"]["qps"] * q, 3),
+                "derived": (
+                    f"rbmat/b+mat perf={rel_perf:.3f} mem={rel_mem:.3f}"
+                ),
+                "rbmat_qps": stats["rbmat"]["qps"],
+                "bpmat_qps": stats["b+mat"]["qps"],
+                "rbmat_mem": stats["rbmat"]["mem"],
+                "bpmat_mem": stats["b+mat"]["mem"],
+            }
+        )
+    emit(rows, "fig4_bmat_types")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

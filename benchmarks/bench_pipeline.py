@@ -1,0 +1,58 @@
+"""Framework-integration benchmark: UpLIF as the data-pipeline doc index
+(vs the B+Tree baseline in the same role) — lookup rate during batch
+assembly and index footprint while shards stream in."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_batches
+from repro.baselines import BTreeLike
+from repro.core import UpLIF
+from repro.data.pipeline import PackedCorpus, PipelineConfig
+
+
+def run(n_docs: int = 16384, seed: int = 0):
+    rows = []
+    cfg = PipelineConfig(n_docs=n_docs, seed=seed, global_batch=64)
+    corpus = PackedCorpus(cfg)
+    rng = np.random.default_rng(seed)
+
+    # stream 8 shards in (updatable-index workload)
+    for sh in range(100, 108):
+        corpus.add_shard(sh, 1024)
+
+    dt = time_batches(lambda: corpus.batch(0), n_iters=5)
+    rows.append(
+        {
+            "name": "uplif_doc_index/batch_assembly",
+            "us_per_call": round(dt * 1e6, 1),
+            "derived": f"{cfg.global_batch/dt:.0f} docs/s, "
+                       f"{corpus.index.index_bytes()/2**10:.1f} KiB index",
+        }
+    )
+
+    # same role with the B+Tree baseline
+    bt = BTreeLike(corpus.doc_ids, np.arange(len(corpus.doc_ids)))
+    ids = rng.choice(corpus.doc_ids, 4096)
+    dt_u = time_batches(lambda: corpus.index.lookup(ids), n_iters=5)
+    dt_b = time_batches(lambda: bt.lookup(ids), n_iters=5)
+    rows.append(
+        {
+            "name": "doc_lookup_4096/UpLIF",
+            "us_per_call": round(dt_u * 1e6, 1),
+            "derived": f"{4096/dt_u/1e6:.3f} Mops/s",
+        }
+    )
+    rows.append(
+        {
+            "name": "doc_lookup_4096/B+Tree",
+            "us_per_call": round(dt_b * 1e6, 1),
+            "derived": f"{4096/dt_b/1e6:.3f} Mops/s",
+        }
+    )
+    emit(rows, "pipeline_index")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

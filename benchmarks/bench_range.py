@@ -1,0 +1,45 @@
+"""Paper Fig. 6a: range query response time per dataset per index."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, index_classes, time_batches
+from repro.data import make_dataset
+
+DATASETS = ("wikits", "logn", "fb")
+
+
+def run(n_keys: int = 400_000, n_ranges: int = 64, span_frac: float = 1e-4,
+        seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for ds in DATASETS:
+        keys = make_dataset(ds, n_keys, seed)
+        span = int((keys[-1] - keys[0]) * span_frac)
+        los = rng.choice(keys[: -n_keys // 10], n_ranges).astype(np.int64)
+        his = los + span
+        for iname, cls in index_classes().items():
+            idx = cls(keys, keys + 1)
+            # insert some updates first so delta buffers are exercised
+            extra = np.setdiff1d(
+                rng.integers(keys[0], keys[-1], 20_000).astype(np.int64), keys
+            )
+            idx.insert(extra, extra + 1)
+            dt = time_batches(
+                lambda: idx.range_query_batch(los, his, max_out=512), n_iters=3
+            )
+            rows.append(
+                {
+                    "name": f"{ds}/{iname}",
+                    "us_per_call": round(1e6 * dt / n_ranges, 2),
+                    "derived": f"{dt/n_ranges*1e3:.3f} ms/range",
+                    "dataset": ds,
+                    "index": iname,
+                }
+            )
+    emit(rows, "fig6a_range")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Section 4 / 5.1 RL self-tuning: agent-tuned vs fixed policies.
+
+Trains the Q-learning agent on a write-heavy WikiTS workload (paper's RL
+training setup), then compares exploitation-mode throughput/memory against
+(a) never tuning and (b) always retraining — validating that the learned
+policy lands at/above the best fixed policy (the paper's self-tuning claim).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import UpLIF
+from repro.core.rl_agent import ACTIONS, AgentConfig, QLearningAgent, encode_state
+from repro.data import WorkloadRunner, make_dataset
+
+
+def _make(keys, seed):
+    runner = WorkloadRunner(keys, init_frac=0.5, seed=seed)
+    return runner, UpLIF(runner.init_keys, runner.init_keys + 1)
+
+
+def _run_ops_factory(runner, wrate):
+    def run_ops(index):
+        ops = 0
+        for _ in range(4):
+            reads, ins = runner.next_batch(wrate)
+            if len(reads):
+                index.lookup(reads)
+            if len(ins):
+                index.insert(ins, ins + 1)
+            ops += len(reads) + len(ins)
+        return ops
+
+    return run_ops
+
+
+def run(n_keys: int = 200_000, episodes: int = 80, seed: int = 0):
+    keys = make_dataset("wikits", n_keys, seed)
+    rows = []
+
+    # train agent
+    runner, idx = _make(keys, seed)
+    agent = QLearningAgent(AgentConfig(alpha=0.8, gamma=0.2, eta=0.7))
+    hist = agent.train(idx, _run_ops_factory(runner, 0.5), episodes=episodes)
+    rew = [h["reward"] for h in hist]
+
+    # evaluate exploit mode vs fixed policies
+    def evaluate(policy: str):
+        rnr, ix = _make(keys, seed + 1)
+        run_ops = _run_ops_factory(rnr, 0.5)
+        import time
+
+        run_ops(ix)  # warmup: jit compiles outside the timed window
+        t0 = time.perf_counter()
+        total = 0
+        for ep in range(16):
+            if policy == "agent":
+                s = encode_state(ix.measures())
+                a = agent.choose(s, explore=False)
+                agent.apply_action(ix, a)
+            elif policy == "always_retrain" and ep % 4 == 0:
+                ix.retrain_full()
+            total += run_ops(ix)
+        dt = time.perf_counter() - t0
+        return total / dt, ix.index_bytes()
+
+    evaluate("never_tune")  # burn-in: compile every capacity-growth variant
+    for policy in ("agent", "never_tune", "always_retrain"):
+        tput, mem = evaluate(policy)
+        rows.append(
+            {
+                "name": policy,
+                "us_per_call": round(1e6 / tput, 3),
+                "derived": f"{tput/1e6:.4f} Mops/s, {mem/2**20:.2f} MiB",
+                "ops_per_s": tput,
+                "index_bytes": int(mem),
+            }
+        )
+    rows.append(
+        {
+            "name": "training_reward",
+            "us_per_call": "",
+            "derived": (
+                f"first5={np.mean(rew[:5]):.3f} last5={np.mean(rew[-5:]):.3f} "
+                f"states={len(agent.q)}"
+            ),
+        }
+    )
+    emit(rows, "rl_tuning")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 6c: UpLIF throughput vs initialization scale x workloads."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import UpLIF
+from repro.data import WORKLOADS, WorkloadRunner, make_dataset
+
+
+def run(scales=(100_000, 400_000, 1_000_000), seconds: float = 2.0,
+        seed: int = 0):
+    rows = []
+    for n in scales:
+        keys = make_dataset("wikits", n, seed)
+        for wname, wrate in WORKLOADS.items():
+            runner = WorkloadRunner(keys, init_frac=0.8, seed=seed)
+            idx = UpLIF(runner.init_keys, runner.init_keys + 1)
+            res = runner.run(idx, wrate, seconds=seconds)
+            rows.append(
+                {
+                    "name": f"n={n}/{wname}",
+                    "us_per_call": round(1e6 * res.seconds / res.ops, 3),
+                    "derived": f"{res.mops:.4f} Mops/s",
+                    "mops": res.mops,
+                    "scale": n,
+                    "workload": wname,
+                }
+            )
+    emit(rows, "fig6c_scalability")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+INDEX_CLASSES = {}
+
+
+def index_classes():
+    global INDEX_CLASSES
+    if not INDEX_CLASSES:
+        from repro.baselines import AlexLike, BTreeLike, DILILike, LIPPLike
+        from repro.core import UpLIF
+
+        INDEX_CLASSES = {
+            "UpLIF": UpLIF,
+            "B+Tree": BTreeLike,
+            "Alex": AlexLike,
+            "LIPP": LIPPLike,
+            "DILI": DILILike,
+        }
+    return INDEX_CLASSES
+
+
+def emit(rows: List[Dict], table: str):
+    """Print CSV (name,us_per_call,derived) and persist JSON."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{table}.json")
+    json.dump(rows, open(path, "w"), indent=1)
+    for r in rows:
+        name = r.get("name", "")
+        us = r.get("us_per_call", "")
+        derived = r.get("derived", "")
+        print(f"{table}/{name},{us},{derived}", flush=True)
+
+
+def time_batches(fn: Callable, n_iters: int, warmup: int = 2) -> float:
+    """Median-of-iters seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]

@@ -1,0 +1,138 @@
+"""Hillclimb A: deepseek-7b train_4k (most collective-bound cell).
+Variants compiled + analyzed; results printed as iteration log rows."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, time
+import jax, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models.init import abstract_params
+from repro.parallel.partition import ShardingStrategy
+from repro.train.optimizer import AdamWConfig, abstract_opt_state
+from repro.train.step import make_train_step
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+cfg = get_config("deepseek-7b")
+mesh = make_production_mesh(multi_pod=False)
+strat = ShardingStrategy(cfg, mesh, batch_size=256)
+constrain = strat.make_constrain()
+pspecs = strat.param_shardings()
+aparams = abstract_params(cfg)
+aopt = abstract_opt_state(aparams)
+opt_sh = type(aopt)(m=pspecs, v=pspecs, step=NamedSharding(mesh, P()))
+batch = input_specs(cfg, "train_4k")
+bspecs = strat.batch_specs(batch)
+
+def run(name, nm, accum_dtype, cil):
+    t0 = time.time()
+    ts = make_train_step(cfg, constrain, pspecs, AdamWConfig(), nm,
+                         accum_dtype=accum_dtype, constrain_in_loop=cil)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(pspecs, opt_sh, bspecs),
+                    out_shardings=(pspecs, opt_sh, None, None),
+                    donate_argnums=(0, 1)).lower(aparams, aopt, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    print(f"{name:28s} t_comp={t_c:6.3f}s t_mem={t_m:6.3f}s t_coll={t_x:6.3f}s "
+          f"coll={h['collective_bytes_total']/2**30:7.1f}GiB "
+          f"temp={m.temp_size_in_bytes/2**30:6.2f}GiB compile={time.time()-t0:5.1f}s")
+    return dict(t_c=t_c, t_m=t_m, t_x=t_x, temp=m.temp_size_in_bytes)
+
+import sys
+which = sys.argv[1] if len(sys.argv) > 1 else "all"
+if which in ("all", "base"): run("baseline nm=8 f32", 8, "float32", True)
+if which in ("all", "a1"):   run("A1 nm=4 f32", 4, "float32", True)
+if which in ("all", "a2"):   run("A2 nm=4 bf16-accum", 4, "bfloat16", True)
+if which in ("all", "a3"):   run("A3 nm=4 bf16 defer-constraint", 4, "bfloat16", False)
+if which in ("all", "a4"):   run("A4 nm=2 bf16-accum", 2, "bfloat16", True)
+
+def run_sp(name, nm, accum_dtype):
+    t0 = time.time()
+    strat_sp = ShardingStrategy(cfg, mesh, batch_size=256, seq_shard=True)
+    con = strat_sp.make_constrain()
+    ts = make_train_step(cfg, con, pspecs, AdamWConfig(), nm,
+                         accum_dtype=accum_dtype)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(pspecs, opt_sh, bspecs),
+                    out_shardings=(pspecs, opt_sh, None, None),
+                    donate_argnums=(0, 1)).lower(aparams, aopt, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    print(f"{name:28s} t_comp={t_c:6.3f}s t_mem={t_m:6.3f}s t_coll={t_x:6.3f}s "
+          f"coll={h['collective_bytes_total']/2**30:7.1f}GiB "
+          f"by_type={ {k: round(v/2**30,1) for k,v in h['collective_bytes'].items() if v>0} } "
+          f"temp={m.temp_size_in_bytes/2**30:6.2f}GiB compile={time.time()-t0:5.1f}s")
+
+if which in ("all", "a5"): run_sp("A5 seq-parallel nm=4 bf16", 4, "bfloat16")
+
+def run_strategy(name, strategy, nm, accum_dtype, seq_shard=False):
+    t0 = time.time()
+    st = ShardingStrategy(cfg, mesh, strategy=strategy, batch_size=256,
+                          seq_shard=seq_shard)
+    con = st.make_constrain()
+    ps = st.param_shardings()
+    osh = type(aopt)(m=ps, v=ps, step=NamedSharding(mesh, P()))
+    ts = make_train_step(cfg, con, ps, AdamWConfig(), nm, accum_dtype=accum_dtype)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(ps, osh, bspecs),
+                    out_shardings=(ps, osh, None, None),
+                    donate_argnums=(0, 1)).lower(aparams, aopt, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    print(f"{name:28s} t_comp={t_c:6.3f}s t_mem={t_m:6.3f}s t_coll={t_x:6.3f}s "
+          f"coll={h['collective_bytes_total']/2**30:7.1f}GiB "
+          f"by_type={ {k: round(v/2**30,1) for k,v in h['collective_bytes'].items() if v>0} } "
+          f"temp={m.temp_size_in_bytes/2**30:6.2f}GiB compile={time.time()-t0:5.1f}s")
+
+if which in ("all", "a6"): run_strategy("A6 fsdp-only nm=4 bf16", "fsdp_only", 4, "bfloat16")
+if which in ("all", "a7"): run_strategy("A7 fsdp-only nm=8 bf16", "fsdp_only", 8, "bfloat16")
+if which in ("all", "a8"): run_strategy("A8 dp_fsdp(256-way) nm=4 bf16", "dp_fsdp", 4, "bfloat16")
+if which in ("all", "a9"): run_strategy("A9 dp_fsdp nm=1 bf16", "dp_fsdp", 1, "bfloat16")
+
+def run_a10(name):
+    import dataclasses
+    t0 = time.time()
+    cfg_b = dataclasses.replace(cfg, param_dtype="bfloat16")
+    ap = jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct(sd.shape, jax.numpy.bfloat16), aparams)
+    st = ShardingStrategy(cfg_b, mesh, strategy="dp_fsdp", batch_size=256)
+    con = st.make_constrain()
+    ps = st.param_shardings()
+    ao = abstract_opt_state(ap)
+    osh = type(ao)(m=ps, v=ps, step=NamedSharding(mesh, P()))
+    bs = st.batch_specs(batch)
+    ts = make_train_step(cfg_b, con, ps, AdamWConfig(), 1)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(ps, osh, bs),
+                    out_shardings=(ps, osh, None, None),
+                    donate_argnums=(0, 1)).lower(ap, ao, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    print(f"{name:28s} t_comp={t_c:6.3f}s t_mem={t_m:6.3f}s t_coll={t_x:6.3f}s "
+          f"coll={h['collective_bytes_total']/2**30:7.1f}GiB "
+          f"temp={m.temp_size_in_bytes/2**30:6.2f}GiB compile={time.time()-t0:5.1f}s")
+
+if which in ("all", "a10"): run_a10("A10 dp_fsdp nm=1 bf16-params")

@@ -1,0 +1,58 @@
+"""Hillclimb B: qwen3-moe-30b-a3b prefill_32k (compute-bound: dense one-hot
+MoE dispatch einsums dwarf useful FLOPs)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time, dataclasses
+import jax
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models.init import abstract_params
+from repro.models.transformer import forward_lm
+from repro.parallel.partition import ShardingStrategy
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+base = get_config("qwen3-moe-30b-a3b")
+mesh = make_production_mesh(multi_pod=False)
+batch = input_specs(base, "prefill_32k")
+
+def run(name, cfg, strategy="tp_fsdp"):
+    t0 = time.time()
+    st = ShardingStrategy(cfg, mesh, strategy=strategy, batch_size=32)
+    con = st.make_constrain()
+    ps = st.param_shardings()
+    bs = st.batch_specs(batch)
+    ap = abstract_params(cfg)
+    def prefill(params, b):
+        return forward_lm(params, cfg, b, con, remat=False)
+    with mesh:
+        c = jax.jit(prefill, in_shardings=(ps, bs)).lower(ap, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    mf = 2.0 * cfg.n_active_params() * 32 * 32768 / 256 / PEAK
+    print(f"{name:34s} t_comp={t_c:7.3f}s t_mem={t_m:7.3f}s t_coll={t_x:7.3f}s "
+          f"useful_frac={mf/max(t_c,t_m,t_x):.3f} temp={m.temp_size_in_bytes/2**30:6.2f}GiB "
+          f"compile={time.time()-t0:5.1f}s")
+
+which = sys.argv[1] if len(sys.argv) > 1 else "all"
+if which in ("all", "base"):
+    run("baseline dense cf=1.25", base)
+if which in ("all", "b1"):
+    run("B1 ragged dispatch",
+        dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="ragged")))
+if which in ("all", "b2"):
+    run("B2 dense cf=1.0",
+        dataclasses.replace(base, moe=dataclasses.replace(base.moe, capacity_factor=1.0)))
+if which in ("all", "b3"):
+    run("B3 dense_chunked c=4096",
+        dataclasses.replace(base, moe=dataclasses.replace(base.moe, dispatch="dense_chunked")))
+if which in ("all", "b4"):
+    run("B4 chunked + cf=1.0",
+        dataclasses.replace(base, moe=dataclasses.replace(
+            base.moe, dispatch="dense_chunked", capacity_factor=1.0)))

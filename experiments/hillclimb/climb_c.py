@@ -1,0 +1,81 @@
+"""Hillclimb C: llava-next-34b train_4k (worst useful-roofline fraction:
+56 heads don't shard on TP=16 -> replicated attention score traffic)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time, dataclasses
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.models.init import abstract_params
+from repro.parallel.partition import ShardingStrategy
+from repro.train.optimizer import AdamWConfig, abstract_opt_state
+from repro.train.step import make_train_step, pick_microbatches
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+base = get_config("llava-next-34b")
+mesh = make_production_mesh(multi_pod=False)
+batch = input_specs(base, "train_4k")
+
+def run(name, cfg, nm=8, accum="float32"):
+    t0 = time.time()
+    st = ShardingStrategy(cfg, mesh, batch_size=256)
+    con = st.make_constrain()
+    ps = st.param_shardings()
+    ap = abstract_params(cfg)
+    ao = abstract_opt_state(ap)
+    osh = type(ao)(m=ps, v=ps, step=NamedSharding(mesh, P()))
+    bs = st.batch_specs(batch)
+    ts = make_train_step(cfg, con, ps, AdamWConfig(), nm, accum_dtype=accum)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(ps, osh, bs),
+                    out_shardings=(ps, osh, None, None),
+                    donate_argnums=(0, 1)).lower(ap, ao, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    mf = 6.0 * cfg.n_active_params() * 256 * 4096 / 256 / PEAK
+    print(f"{name:30s} t_comp={t_c:7.3f}s t_mem={t_m:7.3f}s t_coll={t_x:7.3f}s "
+          f"useful_frac={mf/max(t_c,t_m,t_x):.3f} temp={m.temp_size_in_bytes/2**30:6.2f}GiB "
+          f"compile={time.time()-t0:5.1f}s")
+
+which = sys.argv[1] if len(sys.argv) > 1 else "all"
+if which in ("all", "base"): run("baseline (56H replicated)", base)
+if which in ("all", "c1"):   run("C1 pad heads 56->64", dataclasses.replace(base, pad_heads_to=64))
+
+def run2(name, cfg, nm, seq_shard=False, accum="bfloat16"):
+    t0 = time.time()
+    st = ShardingStrategy(cfg, mesh, batch_size=256, seq_shard=seq_shard)
+    con = st.make_constrain()
+    ps = st.param_shardings()
+    ap = abstract_params(cfg)
+    ao = abstract_opt_state(ap)
+    osh = type(ao)(m=ps, v=ps, step=NamedSharding(mesh, P()))
+    bs = st.batch_specs(batch)
+    ts = make_train_step(cfg, con, ps, AdamWConfig(), nm, accum_dtype=accum)
+    with mesh:
+        c = jax.jit(ts, in_shardings=(ps, osh, bs),
+                    out_shardings=(ps, osh, None, None),
+                    donate_argnums=(0, 1)).lower(ap, ao, batch).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    mf = 6.0 * cfg.n_active_params() * 256 * 4096 / 256 / PEAK
+    print(f"{name:30s} t_comp={t_c:7.3f}s t_mem={t_m:7.3f}s t_coll={t_x:7.3f}s "
+          f"useful_frac={mf/max(t_c,t_m,t_x):.3f} temp={m.temp_size_in_bytes/2**30:6.2f}GiB "
+          f"compile={time.time()-t0:5.1f}s")
+
+if which in ("all", "c2"):
+    run2("C2 pad64 nm=16 bf16-accum", dataclasses.replace(base, pad_heads_to=64), 16)
+if which in ("all", "c3"):
+    run2("C3 C2 + seq-shard acts", dataclasses.replace(base, pad_heads_to=64), 16, seq_shard=True)

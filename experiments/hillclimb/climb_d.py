@@ -1,0 +1,50 @@
+"""Bonus hillclimb D: qwen1.5-110b decode_32k (HBM-bound on KV cache reads).
+Hypothesis: cache reads dominate decode bytes; fp8 storage halves them vs
+bf16 (real deployments use int8+scales; fp8 shows the traffic mechanism)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, time
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.specs import SHAPES
+from repro.models.init import abstract_params
+from repro.models.transformer import abstract_cache, decode_step
+from repro.parallel.partition import ShardingStrategy
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+cfg = get_config("qwen1-5-110b")
+mesh = make_production_mesh(multi_pod=False)
+
+def run(name, cache_dtype):
+    t0 = time.time()
+    info = SHAPES["decode_32k"]
+    strat = ShardingStrategy(cfg, mesh, batch_size=info["batch"])
+    con = strat.make_constrain()
+    ps = strat.param_shardings()
+    ap = abstract_params(cfg)
+    cache = abstract_cache(cfg, info["batch"], info["seq"], cache_dtype)
+    batch = {"tokens": jax.ShapeDtypeStruct((info["batch"], 1), jnp.int32)}
+    bs = strat.batch_specs(batch)
+    cs = strat.cache_specs(cache, info["batch"])
+    def serve(params, b, c):
+        return decode_step(params, cfg, b["tokens"], c, con)
+    with mesh:
+        c = jax.jit(serve, in_shardings=(ps, bs, cs),
+                    out_shardings=(None, cs), donate_argnums=(2,)).lower(
+            ap, batch, cache).compile()
+    h = analyze_hlo(c.as_text())
+    m = c.memory_analysis()
+    ca = c.cost_analysis()
+    ratio = max(h["dot_flops"] / max(ca.get("flops", 1), 1), 1.0)
+    t_c = h["dot_flops"] / PEAK
+    t_m = min(ca.get("bytes accessed", 0) * ratio, h["traffic_bytes_proxy"]) / HBM
+    t_x = h["collective_bytes_total"] / LINK
+    print(f"{name:26s} t_comp={t_c:7.4f}s t_mem={t_m:7.4f}s t_coll={t_x:7.4f}s "
+          f"args={m.argument_size_in_bytes/2**30:6.2f}GiB temp={m.temp_size_in_bytes/2**30:6.2f}GiB "
+          f"compile={time.time()-t0:.1f}s")
+
+which = sys.argv[1] if len(sys.argv) > 1 else "all"
+if which in ("all", "base"): run("baseline bf16 cache", None)
+if which in ("all", "d1"):   run("D1 fp8(e4m3) cache", "float8_e4m3fn")

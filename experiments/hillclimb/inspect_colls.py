@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re, collections
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.dryrun import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_analysis import HLOModule, _shape_bytes
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+mesh = make_production_mesh(multi_pod=False)
+with mesh:
+    fn, args = build_cell(cfg, shape, mesh, "tp_fsdp")
+    compiled = fn.lower(*args).compile()
+txt = compiled.as_text()
+mod = HLOModule(txt)
+
+# per-collective-op totals with trip multiplication
+rows = []
+def visit(comp, mult=1, stack=()):
+    if comp not in mod.comps or comp in stack: return
+    c = mod.comps[comp]
+    for kind, rest in c["collectives"]:
+        b = 0
+        for om in re.finditer(r"%([\w\.\-]+)", rest):
+            s = c["shapes"].get(om.group(1))
+            if s: b += _shape_bytes(s)
+        if b == 0:
+            for om in re.finditer(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?) %", rest):
+                b += _shape_bytes(om.group(1))
+        rows.append((kind, b*mult, mult, rest[:110]))
+    for callee in c["calls"]:
+        visit(callee, mult, stack+(comp,))
+    for cond, body in c["whiles"]:
+        visit(body, mult*mod._trip_count(cond), stack+(comp,))
+visit(mod.entry)
+rows.sort(key=lambda r: -r[1])
+tot = collections.Counter()
+for kind, b, m, _ in rows: tot[kind] += b
+print("totals:", {k: f"{v/2**30:.1f}GiB" for k, v in tot.items()})
+for kind, b, m, rest in rows[:15]:
+    print(f"{kind:18s} {b/2**30:8.2f} GiB x{m:3d}  {rest[:100]}")

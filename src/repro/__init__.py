@@ -1,0 +1,8 @@
+"""repro — UpLIF (updatable self-tuning learned index) as a production JAX
+framework: tensorized index core + Pallas kernels + multi-pod LM substrate.
+
+Subpackages are imported lazily; ``repro.core`` enables jax x64 on import
+(required for int64 keys), which is safe for the dtype-explicit LM substrate.
+"""
+
+__version__ = "1.0.0"

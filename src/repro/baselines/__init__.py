@@ -1,0 +1,9 @@
+"""Baselines from the paper's evaluation (Section 5.1), reimplemented on the
+same tensorized substrate as UpLIF so comparisons isolate the *algorithmic*
+differences (paper's B+Tree / ALEX / LIPP / DILI design points) rather than
+implementation-substrate noise. Each baseline is UpLIF minus specific paper
+contributions — see each class docstring for the exact mapping.
+"""
+from repro.baselines.indexes import AlexLike, BTreeLike, DILILike, LIPPLike
+
+__all__ = ["BTreeLike", "AlexLike", "LIPPLike", "DILILike"]

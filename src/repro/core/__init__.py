@@ -1,0 +1,21 @@
+# UpLIF core — the paper's primary contribution, tensorized for TPU.
+#
+# The index subsystem works on 64-bit integer keys, so x64 must be enabled
+# before any jnp array is created. LM-substrate code is dtype-explicit
+# (int32/float32/bfloat16) and is unaffected by this switch.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.types import (  # noqa: E402,F401
+    RadixSplineModel,
+    BMATState,
+    GMMState,
+    KEY_MAX,
+    TOMBSTONE,
+)
+from repro.core.radix_spline import build_radix_spline, rs_predict  # noqa: E402,F401
+from repro.core.gmm import fit_gmm, gmm_cdf, gmm_pdf  # noqa: E402,F401
+from repro.core.nullifier import nullify  # noqa: E402,F401
+from repro.core.bmat import BMAT  # noqa: E402,F401
+from repro.core.uplif import UpLIF  # noqa: E402,F401

@@ -1,0 +1,97 @@
+"""Nullifier — update placeholders in the key domain (Section 3.4).
+
+Given sorted keys and the learned update distribution D_update, inject empty
+slots ("NULL placeholders") between consecutive keys, sized by Eq. 6:
+
+    GapSize(k_i, k_j) = ceil( budget * ∫_{k_i}^{k_j} D_update / ∫ total )
+
+capped at d_MAX per pair. The total budget is alpha_target * N so that the
+mean gap alpha (Eq. 7) is a direct dial; the paper's Eq. 6 fixes the
+proportionality to the update density, Eq. 7 averages it into the constant
+scalier used at query time — both are preserved (see DESIGN.md §2 note).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gmm import gmm_cdf
+from repro.core.types import GMMState, KEY_MAX, SlotsState
+
+
+class NullifyResult(NamedTuple):
+    slots: SlotsState
+    positions: np.ndarray  # int64[N] — slot index of each input key
+    gaps: np.ndarray       # int64[N] — placeholders placed *before* key i
+    alpha: float           # Eq. 7 mean gap actually realized
+
+
+def gap_sizes(
+    keys: np.ndarray,
+    gmm: GMMState,
+    *,
+    alpha_target: float,
+    d_max: int,
+) -> np.ndarray:
+    """Eq. 6 gap counts for each key (gap before key i, i.e. between k_{i-1}
+    and k_i; the first key gets the [k_0 - 1, k_0] mass)."""
+    keys = np.asarray(keys, dtype=np.int64)
+    n = len(keys)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    budget = float(alpha_target) * n
+    kf = keys.astype(np.float64)
+    edges = np.concatenate([[kf[0] - (kf[1] - kf[0] if n > 1 else 1.0)], kf])
+    cdf = np.asarray(gmm_cdf(gmm, jnp.asarray(edges)))
+    mass = np.maximum(np.diff(cdf), 0.0)
+    total = mass.sum()
+    if total <= 0:
+        mass = np.full(n, 1.0 / n)
+        total = 1.0
+    g = np.ceil(budget * mass / total).astype(np.int64)
+    return np.minimum(g, int(d_max))
+
+
+def nullify(
+    keys: np.ndarray,
+    vals: np.ndarray,
+    gmm: GMMState,
+    *,
+    alpha_target: float = 1.0,
+    d_max: int = 64,
+    tail_slack: int = 8,
+) -> NullifyResult:
+    """Produce the D_update-expanded slot array (Definition 4).
+
+    Empty slots carry the fill-forward key (next occupied key to the right;
+    KEY_MAX in the tail) so the whole array is sorted and binary-searchable.
+    """
+    keys = np.asarray(keys, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.int64)
+    n = len(keys)
+    g = gap_sizes(keys, gmm, alpha_target=alpha_target, d_max=d_max)
+    positions = (np.cumsum(g) + np.arange(n)).astype(np.int64)
+    capacity = int(positions[-1]) + 1 + tail_slack if n else tail_slack
+
+    slot_keys = np.full(capacity, KEY_MAX, dtype=np.int64)
+    slot_vals = np.zeros(capacity, dtype=np.int64)
+    occ = np.zeros(capacity, dtype=bool)
+    slot_keys[positions] = keys
+    slot_vals[positions] = vals
+    occ[positions] = True
+    # fill-forward: empty slot takes the key of the next occupied slot
+    # (vectorized backward fill)
+    idx = np.where(occ, np.arange(capacity), capacity)
+    nxt = np.minimum.accumulate(idx[::-1])[::-1]
+    has_next = nxt < capacity
+    slot_keys[~occ & has_next] = slot_keys[nxt[~occ & has_next]]
+
+    alpha = float(g.sum()) / max(n, 1)
+    slots = SlotsState(
+        keys=jnp.asarray(slot_keys),
+        vals=jnp.asarray(slot_vals),
+        occ=jnp.asarray(occ),
+    )
+    return NullifyResult(slots=slots, positions=positions, gaps=g, alpha=alpha)

@@ -1,0 +1,159 @@
+"""RadixSpline base model (Module 1 in the paper).
+
+Build is a host-side, single-pass greedy spline corridor over the sorted
+(key, position) pairs — vectorized with numpy in bounded windows so a 2M-key
+build stays sub-second. Prediction is a batched JAX program: radix-table
+prefix lookup + bounded branchless binary search over the knots + linear
+interpolation. An equivalent fused Pallas kernel lives in
+repro/kernels/spline_lookup.py; this module is also its oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import RadixSplineModel, RSStatic
+
+_DEF_WINDOW = 8192  # max spline-segment span; caps corridor scan cost at O(N)
+
+
+def _greedy_spline_knots(
+    keys: np.ndarray, pos: np.ndarray, max_error: int, window: int = _DEF_WINDOW
+) -> np.ndarray:
+    """GreedySplineCorridor: pick knot indices so linear interpolation between
+    consecutive knots is within ``max_error`` positions of every data point.
+
+    Vectorized per-window: from anchor ``i`` the feasible slope corridor is
+    [cummax((pos-err-pos_i)/dx), cummin((pos+err-pos_i)/dx)]; the knot is
+    placed just before the first point whose own slope exits the corridor.
+    """
+    n = len(keys)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    if n == 1:
+        return np.zeros(1, dtype=np.int64)
+    knots = [0]
+    i = 0
+    kf = keys.astype(np.float64)
+    pf = pos.astype(np.float64)
+    while i < n - 1:
+        j_end = min(n, i + window)
+        dx = kf[i + 1 : j_end] - kf[i]
+        # keys strictly increasing => dx > 0
+        slope = (pf[i + 1 : j_end] - pf[i]) / dx
+        hi = (pf[i + 1 : j_end] + max_error - pf[i]) / dx
+        lo = (pf[i + 1 : j_end] - max_error - pf[i]) / dx
+        # corridor *before* point m (exclusive): shift accumulations by one
+        hi_before = np.concatenate(([np.inf], np.minimum.accumulate(hi)[:-1]))
+        lo_before = np.concatenate(([-np.inf], np.maximum.accumulate(lo)[:-1]))
+        ok = (slope <= hi_before) & (slope >= lo_before)
+        bad = np.nonzero(~ok)[0]
+        if bad.size == 0:
+            # whole window fits one segment; restart corridor at window end
+            nxt = j_end - 1
+        else:
+            nxt = i + int(bad[0])  # knot at the last ok point = i + bad[0]
+        if nxt == i:  # safety: always make progress
+            nxt = i + 1
+        knots.append(nxt)
+        i = nxt
+    if knots[-1] != n - 1:
+        knots.append(n - 1)
+    return np.asarray(knots, dtype=np.int64)
+
+
+def build_radix_spline(
+    keys: np.ndarray,
+    positions: np.ndarray,
+    *,
+    radix_bits: int = 16,
+    max_error: int = 32,
+) -> Tuple[RadixSplineModel, RSStatic]:
+    """Build the model mapping sorted int64 ``keys`` -> ``positions``."""
+    keys = np.asarray(keys, dtype=np.int64)
+    positions = np.asarray(positions, dtype=np.int64)
+    assert keys.ndim == 1 and keys.shape == positions.shape
+    if len(keys) > 1:
+        assert np.all(np.diff(keys) > 0), "keys must be strictly increasing"
+    assert np.all(keys >= 0), "key domain is non-negative int64"
+
+    knot_idx = _greedy_spline_knots(keys, positions, max_error)
+    sk = keys[knot_idx]
+    sp = positions[knot_idx].astype(np.float64)
+    n_spline = len(sk)
+
+    # --- radix table --------------------------------------------------------
+    max_key = int(keys[-1]) if len(keys) else 1
+    sig_bits = max(1, int(max_key).bit_length())
+    shift = max(0, sig_bits - radix_bits)
+    n_buckets = 1 << radix_bits
+    prefixes = (sk >> shift).astype(np.int64)
+    # table[b] = first spline index with prefix >= b ; two trailing guards
+    table = np.searchsorted(prefixes, np.arange(n_buckets + 2), side="left")
+    table = np.minimum(table, n_spline - 1).astype(np.int32)
+
+    # bound the binary search depth by the widest radix bucket
+    spans = np.diff(np.clip(table, 0, n_spline - 1).astype(np.int64))
+    max_span = int(spans.max()) + 2 if len(spans) else 2
+    n_iters = max(1, int(np.ceil(np.log2(max_span + 1))))
+
+    # pad knots with one trailing copy so segment s+1 is always readable
+    sk_pad = np.concatenate([sk, sk[-1:]])
+    sp_pad = np.concatenate([sp, sp[-1:]])
+
+    model = RadixSplineModel(
+        table=jnp.asarray(table),
+        spline_keys=jnp.asarray(sk_pad),
+        spline_pos=jnp.asarray(sp_pad),
+        shift=jnp.asarray(shift, dtype=jnp.int32),
+    )
+    static = RSStatic(
+        radix_bits=radix_bits,
+        max_error=max_error,
+        n_search_iters=n_iters,
+        n_spline=n_spline,
+    )
+    return model, static
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _rs_predict_impl(model: RadixSplineModel, keys: jnp.ndarray, n_iters: int):
+    n_spline = model.spline_keys.shape[0] - 1
+    n_buckets = model.table.shape[0] - 2
+    b = jnp.clip(keys >> model.shift.astype(keys.dtype), 0, n_buckets - 1)
+    lo = jnp.maximum(model.table[b].astype(jnp.int64), 1) - 1
+    hi = jnp.clip(model.table[b + 1].astype(jnp.int64), 0, n_spline - 1)
+    # rightmost knot with spline_keys[s] <= k, branchless bounded search
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi + 1) >> 1
+        go = model.spline_keys[mid] <= keys
+        return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    s = jnp.clip(lo, 0, n_spline - 1)
+    k0 = model.spline_keys[s]
+    k1 = model.spline_keys[s + 1]
+    p0 = model.spline_pos[s]
+    p1 = model.spline_pos[s + 1]
+    dk = (keys - k0).astype(jnp.float64)
+    seg = jnp.maximum((k1 - k0).astype(jnp.float64), 1.0)
+    t = jnp.clip(dk / seg, 0.0, 1.0)
+    return p0 + t * (p1 - p0)
+
+
+def rs_predict(
+    model: RadixSplineModel, static: RSStatic, keys: jnp.ndarray
+) -> jnp.ndarray:
+    """Predict float positions for a batch of int64 keys (error <= max_error
+    at every trained key; clamped extrapolation outside the key range)."""
+    return _rs_predict_impl(model, keys, static.n_search_iters)
+
+
+def rs_memory_bytes(model: RadixSplineModel) -> int:
+    """Index-structure footprint of the base model (for §5.5 accounting)."""
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in model)

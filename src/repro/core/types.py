@@ -1,0 +1,91 @@
+"""Core pytree types for the UpLIF index subsystem.
+
+All structures are structure-of-arrays so every index operation is a batched
+tensor program (the TPU-native adaptation of the paper's pointer-based CPU
+structures — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel key stored in padding / fill-forward tails. Real keys must be
+# strictly smaller. int64 max keeps the slot arrays sorted with padding last.
+KEY_MAX = np.iinfo(np.int64).max
+# Sentinel value marking a deleted entry inside the BMAT delta buffer.
+TOMBSTONE = np.iinfo(np.int64).min
+
+
+class RadixSplineModel(NamedTuple):
+    """Error-bounded radix spline (Kipf et al. 2020), the paper's base model.
+
+    ``table[b]`` = index of the first spline point whose radix prefix is >= b.
+    ``spline_keys``/``spline_pos`` are the knots, padded by one trailing copy
+    of the last knot so segment interpolation never reads out of bounds.
+    """
+
+    table: jnp.ndarray        # int32[2**radix_bits + 2]
+    spline_keys: jnp.ndarray  # int64[S + 1]
+    spline_pos: jnp.ndarray   # float64[S + 1]
+    shift: jnp.ndarray        # int32 scalar — radix shift amount
+    # Static metadata travels alongside (python ints; stable across jit):
+    # carried in RSStatic below to keep this NamedTuple a pure array pytree.
+
+
+class RSStatic(NamedTuple):
+    """Static (non-traced) metadata for a RadixSplineModel."""
+
+    radix_bits: int
+    max_error: int
+    n_search_iters: int  # bound on the per-query binary-search depth
+    n_spline: int
+
+
+class GMMState(NamedTuple):
+    """1-D Gaussian mixture over the key domain (models D_update)."""
+
+    weights: jnp.ndarray  # float64[K]
+    means: jnp.ndarray    # float64[K]
+    stds: jnp.ndarray     # float64[K]
+
+
+class BMATState(NamedTuple):
+    """Array-packed Balanced Model Adjustment Tree (delta buffer).
+
+    ``keys`` is sorted ascending with KEY_MAX padding; ``size`` live entries.
+    Fences are the B+MAT inner level (every ``fanout``-th key). The RBMAT
+    variant traverses the same sorted array with an Eytzinger/BFS index
+    schedule (no extra arrays needed; see bmat.py).
+    """
+
+    keys: jnp.ndarray    # int64[capacity]
+    vals: jnp.ndarray    # int64[capacity]
+    fences: jnp.ndarray  # int64[capacity // fanout + 1]
+    size: jnp.ndarray    # int32 scalar
+
+
+class SlotsState(NamedTuple):
+    """The gapped, fill-forward-sorted slot array (in-place store).
+
+    Invariants (tested in tests/test_uplif_invariants.py):
+      * ``keys`` is non-decreasing;
+      * an occupied slot holds its own key; an empty slot holds the key of
+        the next occupied slot to its right (KEY_MAX if none);
+      * among a run of equal keys the occupied slot (if any) is the last.
+    """
+
+    keys: jnp.ndarray  # int64[capacity]
+    vals: jnp.ndarray  # int64[capacity]
+    occ: jnp.ndarray   # bool[capacity]
+
+
+class OpStats(NamedTuple):
+    """Running counters used by the self-tuning agent (Section 4.1)."""
+
+    n_lookups: jnp.ndarray        # int64
+    n_inplace_inserts: jnp.ndarray  # int64
+    n_bmat_inserts: jnp.ndarray     # int64
+    n_conflicts: jnp.ndarray        # int64
+    min_granularity: jnp.ndarray    # int64 — smallest split-segment seen

@@ -1,0 +1,4 @@
+from repro.data.datasets import make_dataset, DATASETS
+from repro.data.workloads import WORKLOADS, WorkloadRunner
+
+__all__ = ["make_dataset", "DATASETS", "WORKLOADS", "WorkloadRunner"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for UpLIF's lookup hot path + GMM E-step.
+
+Layout note (TPU adaptation): TPU vector units have no native int64, so all
+kernels take keys decomposed into (hi: int32 = key >> 32, lo: uint32) — exact
+for the 52-bit key domain. ``ops.py`` performs the decomposition and jit-wraps
+each kernel; ``ref.py`` holds the pure-jnp oracles operating on the same
+decomposed representation. Kernels are validated in interpret mode (CPU) and
+tiled with explicit BlockSpecs for VMEM residency on the TPU target.
+"""
+from repro.kernels import ops, ref  # noqa: F401

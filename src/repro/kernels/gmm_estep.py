@@ -1,0 +1,40 @@
+"""GMM E-step kernel (Section 3.4 D_update estimation).
+
+Dense (N_BLK x K) responsibility computation with a numerically-stable
+component softmax — the EM inner loop that dominates GMM refits on large
+update reservoirs. Params are tiny and VMEM-resident; samples are tiled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_BLK = 2048
+
+
+def _kernel(x_ref, w_ref, mu_ref, sd_ref, out_ref):
+    x = x_ref[...]
+    w = w_ref[...]
+    mu = mu_ref[...]
+    sd = sd_ref[...]
+    z = (x[:, None] - mu[None, :]) / sd[None, :]
+    logp = jnp.log(w[None, :]) - 0.5 * z * z - jnp.log(sd[None, :])
+    m = jnp.max(logp, axis=1, keepdims=True)
+    e = jnp.exp(logp - m)
+    out_ref[...] = e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def gmm_estep_pallas(x, weights, means, stds, *, interpret: bool = True):
+    n = x.shape[0]
+    k = weights.shape[0]
+    assert n % N_BLK == 0, "pad samples to N_BLK (ops.py does this)"
+    full = lambda m: pl.BlockSpec((m,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        grid=(n // N_BLK,),
+        in_specs=[pl.BlockSpec((N_BLK,), lambda i: (i,)), full(k), full(k), full(k)],
+        out_specs=pl.BlockSpec((N_BLK, k), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, weights, means, stds)

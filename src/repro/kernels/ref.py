@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (same decomposed-key inputs).
+
+These are the ground truth for the interpret-mode allclose sweeps in
+tests/test_kernels.py, and double as the portable fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def key_leq(hi_a, lo_a, hi_b, lo_b):
+    """(a <= b) on (hi:int32, lo:uint32) decomposed keys."""
+    return (hi_a < hi_b) | ((hi_a == hi_b) & (lo_a <= lo_b))
+
+
+def key_lt(hi_a, lo_a, hi_b, lo_b):
+    return (hi_a < hi_b) | ((hi_a == hi_b) & (lo_a < lo_b))
+
+
+def spline_lookup_ref(
+    table: jnp.ndarray,       # int32[T]
+    sk_hi: jnp.ndarray,       # int32[S+1]
+    sk_lo: jnp.ndarray,       # uint32[S+1]
+    sp: jnp.ndarray,          # float32[S+1] knot positions
+    q_hi: jnp.ndarray,        # int32[Q]
+    q_lo: jnp.ndarray,        # uint32[Q]
+    shift: int,
+    n_iters: int,
+) -> jnp.ndarray:
+    """Predicted float32 position per query (radix + knot search + lerp)."""
+    n_spline = sk_hi.shape[0] - 1
+    n_buckets = table.shape[0] - 2
+    key = (q_hi.astype(jnp.int64) << 32) | q_lo.astype(jnp.int64)
+    b = jnp.clip((key >> shift).astype(jnp.int32), 0, n_buckets - 1)
+    lo = jnp.maximum(table[b].astype(jnp.int32), 1) - 1
+    hi = jnp.clip(table[b + 1].astype(jnp.int32), 0, n_spline - 1)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi + 1) >> 1
+        go = key_leq(sk_hi[mid], sk_lo[mid], q_hi, q_lo)
+        return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    s = jnp.clip(lo, 0, n_spline - 1)
+    k0 = (sk_hi[s].astype(jnp.int64) << 32) | sk_lo[s].astype(jnp.int64)
+    k1 = (sk_hi[s + 1].astype(jnp.int64) << 32) | sk_lo[s + 1].astype(jnp.int64)
+    dk = (key - k0).astype(jnp.float32)
+    seg = jnp.maximum((k1 - k0).astype(jnp.float32), 1.0)
+    t = jnp.clip(dk / seg, 0.0, 1.0)
+    return sp[s] + t * (sp[s + 1] - sp[s])
+
+
+def tile_search_ref(
+    tile_hi: jnp.ndarray,  # int32[T] sorted tile of slot keys (hi)
+    tile_lo: jnp.ndarray,  # uint32[T]
+    q_hi: jnp.ndarray,     # int32[Q]
+    q_lo: jnp.ndarray,     # uint32[Q]
+) -> jnp.ndarray:
+    """Last-mile: per query, index of last tile key <= q (-1 if none)."""
+    leq = key_leq(
+        tile_hi[None, :], tile_lo[None, :], q_hi[:, None], q_lo[:, None]
+    )
+    return jnp.sum(leq, axis=1).astype(jnp.int32) - 1
+
+
+def bmat_rank_ref(
+    keys_hi: jnp.ndarray,   # int32[C] sorted (KEY_MAX padded)
+    keys_lo: jnp.ndarray,   # uint32[C]
+    q_hi: jnp.ndarray,
+    q_lo: jnp.ndarray,
+) -> jnp.ndarray:
+    """searchsorted-left: #entries with key < q."""
+    lt = key_lt(keys_hi[None, :], keys_lo[None, :], q_hi[:, None], q_lo[:, None])
+    return jnp.sum(lt, axis=1).astype(jnp.int32)
+
+
+def gmm_estep_ref(
+    x: jnp.ndarray,        # float32[N]
+    weights: jnp.ndarray,  # float32[K]
+    means: jnp.ndarray,    # float32[K]
+    stds: jnp.ndarray,     # float32[K]
+) -> jnp.ndarray:
+    """Responsibilities (N, K), numerically-stable softmax over components."""
+    z = (x[:, None] - means[None, :]) / stds[None, :]
+    logp = jnp.log(weights[None, :]) - 0.5 * z * z - jnp.log(stds[None, :])
+    m = jnp.max(logp, axis=1, keepdims=True)
+    e = jnp.exp(logp - m)
+    return e / jnp.sum(e, axis=1, keepdims=True)

@@ -1,0 +1,93 @@
+"""Fused RadixSpline lookup kernel (the paper's Module-1 hot path).
+
+Per query: radix-table prefix probe → bounded binary search over spline knots
+→ linear interpolation. One kernel launch handles a full query batch; the
+radix table and knot arrays are VMEM-resident (see ops.py for size guards),
+queries are tiled Q_BLK at a time.
+
+TPU notes:
+  * keys are (hi:int32, lo:uint32) pairs — no int64 on the VPU;
+  * positions are float32 (precision bound: capacity < 2^24 exact; above
+    that the last-mile window absorbs <=0.5-slot rounding, ops.py widens
+    the caller's search margin by 1);
+  * Q_BLK = 1024 keeps the per-step working set (queries + outputs) at a
+    few KB; the knot arrays dominate VMEM (12B/knot).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLK = 1024
+
+
+def _kernel(shift: int, n_iters: int, table_ref, sk_hi_ref, sk_lo_ref, sp_ref,
+            q_hi_ref, q_lo_ref, out_ref):
+    table = table_ref[...]
+    sk_hi = sk_hi_ref[...]
+    sk_lo = sk_lo_ref[...]
+    sp = sp_ref[...]
+    q_hi = q_hi_ref[...]
+    q_lo = q_lo_ref[...]
+
+    n_spline = sk_hi.shape[0] - 1
+    n_buckets = table.shape[0] - 2
+    # radix prefix: the table shift consumes >= 32 low bits for the assigned
+    # key domain, so the prefix comes from hi alone (guarded in ops.py).
+    b = jnp.clip(q_hi >> (shift - 32), 0, n_buckets - 1)
+    lo = jnp.maximum(jnp.take(table, b), 1) - 1
+    hi = jnp.clip(jnp.take(table, b + 1), 0, n_spline - 1)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi + 1) >> 1
+        m_hi = jnp.take(sk_hi, mid)
+        m_lo = jnp.take(sk_lo, mid)
+        go = (m_hi < q_hi) | ((m_hi == q_hi) & (m_lo <= q_lo))
+        return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
+    s = jnp.clip(lo, 0, n_spline - 1)
+
+    k0_hi = jnp.take(sk_hi, s)
+    k0_lo = jnp.take(sk_lo, s)
+    k1_hi = jnp.take(sk_hi, s + 1)
+    k1_lo = jnp.take(sk_lo, s + 1)
+    # 52-bit deltas fit float32 *relatively*: dk/seg is computed from
+    # hi/lo-decomposed differences accumulated in f32
+    two32 = jnp.float32(4294967296.0)
+    dk = (q_hi - k0_hi).astype(jnp.float32) * two32 + (
+        q_lo.astype(jnp.float32) - k0_lo.astype(jnp.float32)
+    )
+    seg = (k1_hi - k0_hi).astype(jnp.float32) * two32 + (
+        k1_lo.astype(jnp.float32) - k0_lo.astype(jnp.float32)
+    )
+    t = jnp.clip(dk / jnp.maximum(seg, 1.0), 0.0, 1.0)
+    p0 = jnp.take(sp, s)
+    p1 = jnp.take(sp, s + 1)
+    out_ref[...] = p0 + t * (p1 - p0)
+
+
+def spline_lookup_pallas(
+    table, sk_hi, sk_lo, sp, q_hi, q_lo, *, shift: int, n_iters: int,
+    interpret: bool = True,
+):
+    """Launch over ceil(Q / Q_BLK) grid steps; Q must be Q_BLK-aligned."""
+    q = q_hi.shape[0]
+    assert q % Q_BLK == 0, "pad queries to Q_BLK (ops.py does this)"
+    t = table.shape[0]
+    s = sk_hi.shape[0]
+    grid = (q // Q_BLK,)
+    full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
+    per_q = pl.BlockSpec((Q_BLK,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_kernel, shift, n_iters),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        grid=grid,
+        in_specs=[full(t), full(s), full(s), full(s), per_q, per_q],
+        out_specs=per_q,
+        interpret=interpret,
+    )(table, sk_hi, sk_lo, sp, q_hi, q_lo)

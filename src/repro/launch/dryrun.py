@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory_analysis / cost_analysis / HLO collective bytes for the
+roofline (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-110b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  ... [--strategy tp_fsdp|fsdp_only] [--moe-dispatch dense|ragged]
+      [--out experiments/dryrun] [--tag baseline]
+
+Each cell writes <out>/<tag>/<arch>__<shape>__<mesh>.json.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, cell_supported, input_specs  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.models.init import abstract_params  # noqa: E402
+from repro.models.transformer import decode_step, forward_lm, loss_fn  # noqa: E402
+from repro.parallel.partition import ShardingStrategy  # noqa: E402
+from repro.train.optimizer import (  # noqa: E402
+    AdamWConfig,
+    abstract_opt_state,
+    adamw_update,
+)
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def choose_strategy(cfg: ModelConfig, shape: str, mesh) -> str:
+    """'auto' strategy (encodes the §Perf hillclimb winners):
+    - small dense models (<10B) training with batch divisible by the full
+      device count: pure DP/FSDP (no TP all-reduces) — hillclimb A;
+    - everything else: tp_fsdp."""
+    info = SHAPES[shape]
+    n_dev = int(__import__("numpy").prod(list(mesh.shape.values())))
+    if (
+        info["kind"] == "train"
+        and cfg.n_params() < 10e9
+        and info["batch"] % n_dev == 0
+    ):
+        return "dp_fsdp"
+    return "tp_fsdp"
+
+
+def build_cell(cfg: ModelConfig, shape: str, mesh, strategy: str,
+               cache_dtype: str | None = None):
+    """Returns (jitted_fn, example_args) for the cell."""
+    info = SHAPES[shape]
+    if strategy == "auto":
+        strategy = choose_strategy(cfg, shape, mesh)
+    strat = ShardingStrategy(
+        cfg, mesh, strategy=strategy, batch_size=info["batch"]
+    )
+    constrain = strat.make_constrain()
+    pspecs = strat.param_shardings()
+    aparams = abstract_params(cfg)
+    batch = input_specs(cfg, shape)
+
+    if info["kind"] == "train":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.train.step import make_train_step, pick_microbatches
+
+        aopt = abstract_opt_state(aparams)
+        opt_shardings = type(aopt)(
+            m=pspecs, v=pspecs, step=NamedSharding(mesh, P())
+        )
+        bspecs = strat.batch_specs(batch)
+        n_data = int(
+            __import__("numpy").prod(
+                [mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]
+            )
+        )
+        nm = pick_microbatches(info["batch"], info["seq"], n_data)
+        if strategy == "dp_fsdp":
+            nm = 1  # microbatches < device count pad wastefully (§Perf A8)
+        train_step = make_train_step(
+            cfg, constrain, pspecs, AdamWConfig(), nm
+        )
+        fn = jax.jit(
+            train_step,
+            in_shardings=(pspecs, opt_shardings, bspecs),
+            out_shardings=(pspecs, opt_shardings, None, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (aparams, aopt, batch)
+
+    if info["kind"] == "prefill":
+        bspecs = strat.batch_specs(batch)
+
+        def prefill(params, batch):
+            return forward_lm(params, cfg, batch, constrain, remat=False)
+
+        fn = jax.jit(prefill, in_shardings=(pspecs, bspecs))
+        return fn, (aparams, batch)
+
+    # decode
+    if cache_dtype:
+        from repro.models.transformer import abstract_cache
+
+        batch["cache"] = abstract_cache(
+            cfg, info["batch"], info["seq"], cache_dtype
+        )
+    bspecs = strat.batch_specs(batch["batch"])
+    cspecs = strat.cache_specs(batch["cache"], info["batch"])
+
+    def serve_step(params, b, cache):
+        return decode_step(params, cfg, b["tokens"], cache, constrain)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(pspecs, bspecs, cspecs),
+        out_shardings=(None, cspecs),
+        donate_argnums=(2,),
+    )
+    return fn, (aparams, batch["batch"], batch["cache"])
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
+             moe_dispatch: str, out_dir: str, tag: str,
+             cache_dtype: str | None = None):
+    cfg = get_config(arch)
+    if tag == "optimized" and cfg.n_heads % 16 != 0 and cfg.head_dim * cfg.n_heads >= 4096:
+        # §Perf C1: zero-padded Q heads unlock TP head sharding
+        pad = ((cfg.n_heads + 15) // 16) * 16
+        cfg = dataclasses.replace(cfg, pad_heads_to=pad)
+    if moe_dispatch != "dense" and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch)
+        )
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(out_dir, tag), exist_ok=True)
+    path = os.path.join(out_dir, tag, f"{arch}__{shape}__{mesh_name}.json")
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "tag": tag,
+        "strategy": strategy, "moe_dispatch": moe_dispatch,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip] {arch} {shape} {mesh_name}: {why}", flush=True)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            fn, args = build_cell(cfg, shape, mesh, strategy, cache_dtype)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            from repro.launch.hlo_analysis import analyze_hlo
+
+            hstats = analyze_hlo(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "alias_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+            },
+            # trip-count-corrected matmul FLOPs (see hlo_analysis.py);
+            # cost_analysis' figure kept for reference (undercounts loops)
+            flops_per_device=float(hstats["dot_flops"]),
+            flops_cost_analysis=float(cost.get("flops", 0.0)),
+            bytes_accessed_per_device=float(cost.get("bytes accessed", 0.0)),
+            traffic_bytes_proxy=float(hstats["traffic_bytes_proxy"]),
+            collective_bytes_per_device=hstats["collective_bytes"],
+            collective_bytes_total=float(hstats["collective_bytes_total"]),
+            hlo_bytes=len(hlo),
+        )
+        print(
+            f"[ok]   {arch} {shape} {mesh_name}: compile {t_compile:.1f}s "
+            f"flops/dev {rec['flops_per_device']:.3e} "
+            f"temp {rec['memory']['temp_size_in_bytes']/2**30:.2f} GiB",
+            flush=True,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} {shape} {mesh_name}: {rec['error'][:200]}", flush=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--strategy", default="tp_fsdp")
+    ap.add_argument("--moe-dispatch", default="dense")
+    ap.add_argument("--cache-dtype", default=None,
+                    help="decode-cache storage dtype (e.g. float8_e4m3fn; "
+                         "§Perf iteration D1 — changes numerics, opt-in)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(
+                    run_cell(arch, shape, mp, args.strategy,
+                             args.moe_dispatch, args.out, args.tag,
+                             args.cache_dtype)
+                )
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped-by-design, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

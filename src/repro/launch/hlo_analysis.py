@@ -1,0 +1,213 @@
+"""Static analysis over compiled HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+silently undercounts scan-over-layers / microbatch-accumulation programs by
+the trip count. This module reparses the optimized HLO and computes:
+
+  * total dot FLOPs with while-loop trip-count multiplication (matmul-only
+    FLOPs — the standard MFU numerator; elementwise ops are excluded),
+  * per-type collective operand bytes (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), also trip-multiplied,
+  * bytes touched by dot operands (a lower bound on HBM traffic for the
+    memory roofline term; the true figure additionally includes elementwise
+    traffic, reported separately from cost_analysis 'bytes accessed').
+
+Everything is per-device (the HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .+ \{")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT )?%([\w\.\-]+) = (.+?) ([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_elems(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_elems(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, dict] = {}
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            m = _COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+            if m and not line.startswith(" "):
+                cur = m.group(1)
+                self.comps[cur] = {
+                    "shapes": {},      # instr name -> output shape str
+                    "dots": [],        # (out_shape, lhs_name, lhs_cdims)
+                    "convs": [],       # (out_shape, window_size_prod, in_feat)
+                    "whiles": [],      # (cond_name, body_name)
+                    "calls": [],       # called computation names (x1)
+                    "collectives": [], # (kind, operand_shape_str)
+                    "consts": [],
+                }
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, out_shape, op, rest = im.groups()
+            self.comps[cur]["shapes"][name] = out_shape
+            if op == "parameter":
+                continue
+            if op not in (
+                "tuple", "get-tuple-element", "bitcast", "constant",
+                "copy", "after-all",
+            ):
+                self.comps[cur].setdefault("out_bytes", 0)
+                self.comps[cur]["out_bytes"] = (
+                    self.comps[cur]["out_bytes"] + _shape_bytes(out_shape)
+                )
+            if op == "constant" and ("s32[]" in out_shape or "s64[]" in out_shape):
+                cm = re.search(r"constant\((\d+)\)", line)
+                if cm:
+                    self.comps[cur]["consts"].append(int(cm.group(1)))
+            if op == "dot":
+                lhs_m = re.match(r"%([\w\.\-]+)", rest)
+                cd_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if lhs_m and cd_m:
+                    cdims = [int(x) for x in cd_m.group(1).split(",") if x]
+                    self.comps[cur]["dots"].append(
+                        (out_shape, lhs_m.group(1), cdims)
+                    )
+            elif op == "convolution":
+                self.comps[cur]["convs"].append(line)
+            elif op == "while":
+                c_m = re.search(r"condition=%?([\w\.\-]+)", line)
+                b_m = re.search(r"body=%?([\w\.\-]+)", line)
+                if c_m and b_m:
+                    self.comps[cur]["whiles"].append((c_m.group(1), b_m.group(1)))
+            else:
+                base = op.replace("-start", "")
+                if base in _COLLECTIVES and not op.endswith("-done"):
+                    # operand bytes: parse shapes inside the operand list
+                    self.comps[cur]["collectives"].append((base, rest))
+                for key in ("calls=", "to_apply=", "body=", "branch_computations="):
+                    for cm in re.finditer(key + r"\{?%?([\w\.\-]+)", line):
+                        if op != "while":
+                            self.comps[cur]["calls"].append(cm.group(1))
+
+    def _trip_count(self, cond_name: str) -> int:
+        consts = self.comps.get(cond_name, {}).get("consts", [])
+        return max(consts) if consts else 1
+
+    def _dot_flops_local(self, comp: str) -> float:
+        total = 0.0
+        c = self.comps[comp]
+        for out_shape, lhs_name, cdims in c["dots"]:
+            elems = _shape_elems(out_shape)
+            if not elems:
+                continue
+            out_n = 1
+            for d in elems[0][1]:
+                out_n *= d
+            lhs_shape = c["shapes"].get(lhs_name, "")
+            lelems = _shape_elems(lhs_shape)
+            k = 1
+            if lelems:
+                dims = lelems[0][1]
+                for cd in cdims:
+                    if cd < len(dims):
+                        k *= dims[cd]
+            total += 2.0 * out_n * k
+        return total
+
+    def _coll_bytes_local(self, comp: str) -> Dict[str, float]:
+        out = {k: 0.0 for k in _COLLECTIVES}
+        c = self.comps[comp]
+        for kind, rest in c["collectives"]:
+            b = 0
+            # operands with inline shapes
+            for om in re.finditer(r"([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?) %", rest):
+                b += _shape_bytes(om.group(1))
+            if b == 0:
+                # operands referenced by name only
+                for om in re.finditer(r"%([\w\.\-]+)", rest):
+                    s = c["shapes"].get(om.group(1))
+                    if s:
+                        b += _shape_bytes(s)
+            out[kind] += b
+        return out
+
+    def analyze(self) -> Dict[str, object]:
+        memo: Dict[str, Tuple[float, Dict[str, float], float]] = {}
+
+        def visit(comp: str, stack=()):
+            if comp in memo:
+                return memo[comp]
+            if comp not in self.comps or comp in stack:
+                return 0.0, {k: 0.0 for k in _COLLECTIVES}, 0.0
+            c = self.comps[comp]
+            f = self._dot_flops_local(comp)
+            cb = self._coll_bytes_local(comp)
+            ob = float(c.get("out_bytes", 0))
+            for callee in c["calls"]:
+                cf, ccb, cob = visit(callee, stack + (comp,))
+                f += cf
+                # fusion/wrapped internals never touch HBM — only the fusion
+                # op's own output (already counted at the call site) does
+                if not (
+                    callee.startswith("fused") or callee.startswith("wrapped")
+                ):
+                    ob += cob
+                for k in cb:
+                    cb[k] += ccb[k]
+            for cond, body in c["whiles"]:
+                trips = self._trip_count(cond)
+                bf, bcb, bob = visit(body, stack + (comp,))
+                f += trips * bf
+                ob += trips * bob
+                for k in cb:
+                    cb[k] += trips * bcb[k]
+            memo[comp] = (f, cb, ob)
+            return memo[comp]
+
+        flops, coll, out_bytes = visit(self.entry)
+        return {
+            "dot_flops": flops,
+            "collective_bytes": coll,
+            "collective_bytes_total": sum(coll.values()),
+            # HBM-traffic proxy: every instruction's output written once,
+            # operands read once (~= outputs of producers) => ~2x output
+            # bytes; trip-count corrected. Fusion double-counts (the fusion
+            # op and its computation) are avoided by skipping call targets'
+            # root duplication being negligible in practice.
+            "traffic_bytes_proxy": 2.0 * out_bytes,
+        }
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    return HLOModule(text).analyze()

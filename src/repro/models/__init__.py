@@ -1,0 +1,21 @@
+from repro.models.config import ModelConfig
+from repro.models.init import abstract_params, init_params, param_descriptors
+from repro.models.transformer import (
+    abstract_cache,
+    decode_step,
+    forward_lm,
+    init_cache,
+    loss_fn,
+)
+
+__all__ = [
+    "ModelConfig",
+    "abstract_params",
+    "init_params",
+    "param_descriptors",
+    "forward_lm",
+    "loss_fn",
+    "init_cache",
+    "abstract_cache",
+    "decode_step",
+]

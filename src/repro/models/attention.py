@@ -1,0 +1,279 @@
+"""Attention variants: GQA/MQA/MHA (optional bias, local window, softcap),
+MLA (DeepSeek-V2 latent attention), and cross-attention (whisper decoder).
+
+All functions take *flat* projection weights (d_model, n*head_dim) — flat
+dims shard cleanly on the `model` mesh axis for every assigned arch (head_dim
+= multiple of 128); the 4D reshape gets an explicit sharding constraint from
+the strategy object (repro/parallel/partition.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rope, softcap
+
+NEG_INF = -2.0e38
+
+
+def _z():
+    return jnp.zeros((), jnp.int32)
+
+
+def _i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, T, Hkv, dh)
+    v: jnp.ndarray        # (B, T, Hkv, dh)
+    length: jnp.ndarray   # int32 scalar — tokens already in cache
+
+
+def _causal_mask(s: int, t: int, offset):
+    """(s, t) additive mask; offset = #cached tokens before this chunk."""
+    q_pos = jnp.arange(s)[:, None] + offset
+    k_pos = jnp.arange(t)[None, :]
+    return jnp.where(k_pos <= q_pos, 0.0, NEG_INF)
+
+
+def _local_mask(s: int, t: int, offset, window: int):
+    q_pos = jnp.arange(s)[:, None] + offset
+    k_pos = jnp.arange(t)[None, :]
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_core(q, k, v, mask, logit_cap: float = 0.0):
+    """q: (B,S,H,dh), k/v: (B,T,Hkv,dh) with H % Hkv == 0. f32 softmax."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, s, hkv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    scores = softcap(scores.astype(jnp.float32), logit_cap)
+    scores = scores + mask[None, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, dh)
+
+
+# q-length above which self-attention switches to chunked execution: caps the
+# materialized score block at (B, H, CHUNK, T) instead of (B, H, S, T).
+CHUNK_THRESHOLD = 8192
+
+
+def _pick_chunk(n_heads: int, t: int) -> int:
+    # smaller chunks for head-replicated archs (H not divisible by the TP
+    # degree) whose score tensors cannot shard over heads
+    return 64 if (n_heads % 16 or t > 131072) else 512
+
+
+def chunked_self_attention(q, k, v, *, causal: bool, window: int, cap: float,
+                           chunk: int):
+    """Exact attention with q processed CHUNK rows at a time (lax.scan):
+    bounds the score working set to (B, H, chunk, T). The TPU analogue of
+    flash-attention's outer loop; inner softmax stays full-T (exact)."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    qc = q.reshape(b, nc, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    k_pos = jnp.arange(t)[None, :]
+
+    def body(_, inp):
+        ci, qi = inp
+        q_pos = ci * chunk + jnp.arange(chunk)[:, None]
+        if causal:
+            ok = k_pos <= q_pos
+            if window:
+                ok &= k_pos > q_pos - window
+        else:
+            ok = jnp.ones((chunk, t), bool)
+        mask = jnp.where(ok, 0.0, NEG_INF)
+        return None, attention_core(qi, k, v, mask, cap)
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(nc), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def gqa(
+    x,
+    p,
+    cfg,
+    positions,
+    cache: Optional[KVCache] = None,
+    window: int = 0,
+    constrain=lambda t, kind: t,
+    causal: bool = True,
+):
+    """Standard attention path. ``p`` holds wq/wk/wv/wo (+ optional biases).
+    With a cache, x is the new chunk (decode: S=1) appended at cache.length.
+    Returns (out, new_cache)."""
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    cd = x.dtype
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dn->bsn", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dn->bsn", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = constrain(q.reshape(b, s, cfg.n_heads_eff, dh), "heads4d")
+    k = constrain(k.reshape(b, s, cfg.n_kv_heads, dh), "kv4d")
+    v = constrain(v.reshape(b, s, cfg.n_kv_heads, dh), "kv4d")
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_frac)
+
+    if cache is None:
+        if s >= CHUNK_THRESHOLD:
+            out = chunked_self_attention(
+                q, k, v, causal=causal, window=window,
+                cap=cfg.attn_logit_softcap,
+                chunk=_pick_chunk(cfg.n_heads_eff, s),
+            )
+        else:
+            if causal:
+                mask = (
+                    _local_mask(s, s, 0, window)
+                    if window
+                    else _causal_mask(s, s, 0)
+                )
+            else:
+                mask = jnp.zeros((s, s), jnp.float32)
+            out = attention_core(q, k, v, mask, cfg.attn_logit_softcap)
+        new_cache = None
+    else:
+        t = cache.k.shape[1]
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (_z(), _i32(cache.length), _z(), _z())
+        )
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (_z(), _i32(cache.length), _z(), _z())
+        )
+        mask = (
+            _local_mask(s, t, cache.length, window)
+            if window
+            else _causal_mask(s, t, cache.length)
+        )
+        # mask out unwritten cache tail
+        written = jnp.arange(t)[None, :] < (cache.length + s)
+        mask = jnp.where(written, mask, NEG_INF)
+        out = attention_core(
+            q, k_all.astype(cd), v_all.astype(cd), mask, cfg.attn_logit_softcap
+        )
+        new_cache = KVCache(k_all, v_all, cache.length + s)
+
+    out = constrain(out, "heads4d").reshape(b, s, cfg.n_heads_eff * dh)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo"].astype(cd)), new_cache
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray      # (B, T, kv_lora) compressed latent
+    krope: jnp.ndarray    # (B, T, rope_dim) shared rotary key
+    length: jnp.ndarray
+
+
+def mla(
+    x,
+    p,
+    cfg,
+    positions,
+    cache: Optional[MLACache] = None,
+    constrain=lambda t, kind: t,
+):
+    """Multi-head Latent Attention (DeepSeek-V2): KV compressed to a shared
+    latent c_kv (kv_lora_rank) + a single shared RoPE key; per-head K/V are
+    reconstructed from the latent. Cache stores only (c_kv, k_rope) — the
+    512+64 per-token footprint that makes 32k decode cells fit."""
+    m = cfg.mla
+    b, s, d = x.shape
+    cd = x.dtype
+    h = cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+
+    if m.q_lora_rank:
+        ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cd))
+        q = jnp.einsum("bsr,rn->bsn", ql, p["wq_b"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dn->bsn", x, p["wq"].astype(cd))
+    q = q.reshape(b, s, h, qd)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cd))
+    ckv, k_rope_in = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    k_rope = rope(
+        k_rope_in[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache.ckv, ckv.astype(cache.ckv.dtype), (_z(), _i32(cache.length), _z())
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache.krope, k_rope.astype(cache.krope.dtype), (_z(), _i32(cache.length), _z())
+        )
+        new_cache = MLACache(ckv, k_rope, cache.length + s)
+        offset = cache.length
+    else:
+        new_cache = None
+        offset = 0
+
+    t = ckv.shape[1]
+    # reconstruct per-head K_nope and V from the latent
+    kv = jnp.einsum("btr,rn->btn", ckv.astype(cd), p["wkv_b"].astype(cd))
+    kv = kv.reshape(b, t, h, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., : m.nope_head_dim], kv[..., m.nope_head_dim :]
+
+    scale = 1.0 / jnp.sqrt(qd).astype(jnp.float32)
+
+    def mla_core(qn, qr, offset_rows):
+        """qn/qr: (b, sc, h, d) chunk; offset_rows: absolute first q row."""
+        sc = qn.shape[1]
+        s_nope = jnp.einsum("bshd,bthd->bhst", qn, k_nope)
+        s_rope = jnp.einsum("bshd,btd->bhst", qr, k_rope.astype(cd))
+        scores = (s_nope + s_rope).astype(jnp.float32) * scale
+        q_pos = offset_rows + jnp.arange(sc)[:, None]
+        k_pos = jnp.arange(t)[None, :]
+        ok = k_pos <= q_pos
+        if cache is not None:
+            ok &= k_pos < (offset + s)
+        mask = jnp.where(ok, 0.0, NEG_INF)
+        probs = jax.nn.softmax(scores + mask[None, None], axis=-1).astype(cd)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    if cache is None and s >= CHUNK_THRESHOLD:
+        chunk = _pick_chunk(h, t)
+        nc = s // chunk
+        qnc = q_nope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+        qrc = q_rope.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+
+        def body(_, inp):
+            ci, qn, qr = inp
+            return None, mla_core(qn, qr, ci * chunk)
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(nc), qnc, qrc))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h * m.v_head_dim)
+    else:
+        out = mla_core(q_nope, q_rope, jnp.asarray(offset))
+        out = out.reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo"].astype(cd)), new_cache
+
+
+def cross_attention(x, enc_kv, p, cfg, constrain=lambda t, kind: t):
+    """Whisper decoder cross-attn; enc_kv = (k, v) precomputed from encoder."""
+    b, s, d = x.shape
+    dh = cfg.head_dim
+    cd = x.dtype
+    q = jnp.einsum("bsd,dn->bsn", x, p["wq_x"].astype(cd))
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k, v = enc_kv
+    t = k.shape[1]
+    mask = jnp.zeros((s, t), dtype=jnp.float32)
+    out = attention_core(q, k.astype(cd), v.astype(cd), mask)
+    out = out.reshape(b, s, cfg.n_heads * dh)
+    return jnp.einsum("bsn,nd->bsd", out, p["wo_x"].astype(cd))

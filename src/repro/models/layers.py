@@ -1,0 +1,68 @@
+"""Shared layer primitives (dtype-explicit; safe under the x64 flag)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 10000.0, rope_frac: float = 1.0):
+    """Rotary embedding on the last dim of (..., S, H, dh); ``rope_frac`` < 1
+    rotates only the leading fraction (phi-4 partial rotary)."""
+    dh = x.shape[-1]
+    rot = int(dh * rope_frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def swiglu(x, w1, w3, w2, compute_dtype):
+    h = jnp.einsum("bsd,df->bsf", x, w1.astype(compute_dtype))
+    g = jnp.einsum("bsd,df->bsf", x, w3.astype(compute_dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(h) * g, w2.astype(compute_dtype))
+
+
+def gelu_mlp(x, w1, b1, w2, b2, compute_dtype):
+    h = jnp.einsum("bsd,df->bsf", x, w1.astype(compute_dtype))
+    if b1 is not None:
+        h = h + b1.astype(compute_dtype)
+    h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, w2.astype(compute_dtype))
+    if b2 is not None:
+        out = out + b2.astype(compute_dtype)
+    return out
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits

@@ -1,0 +1,202 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV-6 (Finch).
+
+Both support two execution modes:
+  * sequence mode (training / prefill): parallel over time where possible —
+    RG-LRU uses an associative scan; RWKV-6 uses a chunked lax.scan whose
+    state is O(H * dh^2), independent of sequence length.
+  * step mode (decode): O(1) state update per token — this is what makes the
+    ``long_500k`` cell feasible for these families (no KV cache).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin)
+# ---------------------------------------------------------------------------
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray        # (B, d_rnn) recurrent state
+    conv: jnp.ndarray     # (B, conv_width - 1, d_rnn) conv tail
+
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def _rglru_gates(x, p, cd):
+    r = jax.nn.sigmoid(jnp.einsum("...d,dn->...n", x, p["w_rgate"].astype(cd)))
+    i = jax.nn.sigmoid(jnp.einsum("...d,dn->...n", x, p["w_igate"].astype(cd)))
+    log_a = -_C * r * jax.nn.softplus(p["a_param"].astype(cd))
+    a = jnp.exp(log_a)
+    gated = i * x
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return a, scale * gated
+
+
+def rglru_seq(x, p):
+    """x: (B, S, d_rnn) -> same, h0 = 0. Associative scan over time."""
+    cd = x.dtype
+    a, b = _rglru_gates(x, p, cd)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_step(x, p, h_prev):
+    """x: (B, d_rnn), h_prev: (B, d_rnn) -> (y, h)."""
+    cd = x.dtype
+    a, b = _rglru_gates(x, p, cd)
+    h = a * h_prev + b
+    return h, h
+
+
+def conv1d_seq(x, w):
+    """Causal depthwise conv, x: (B,S,D), w: (cw, D)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = 0.0
+    for i in range(cw):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def conv1d_step(x, w, tail):
+    """x: (B,D); tail: (B,cw-1,D) -> (y, new_tail)."""
+    cw = w.shape[0]
+    window = jnp.concatenate([tail, x[:, None, :]], axis=1)  # (B,cw,D)
+    y = jnp.einsum("bcd,cd->bd", window, w)
+    return y, window[:, 1:, :]
+
+
+def rglru_block_seq(x, p, cfg):
+    """Full Griffin recurrent block, sequence mode. x: (B,S,D)."""
+    cd = x.dtype
+    u = jnp.einsum("bsd,dn->bsn", x, p["wx"].astype(cd))
+    g = jax.nn.gelu(jnp.einsum("bsd,dn->bsn", x, p["wg"].astype(cd)))
+    u = conv1d_seq(u, p["conv_w"].astype(cd))
+    h = rglru_seq(u, p)
+    return jnp.einsum("bsn,nd->bsd", h * g, p["w_out"].astype(cd))
+
+
+def rglru_block_step(x, p, cfg, state: RGLRUState):
+    cd = x.dtype
+    u = jnp.einsum("bd,dn->bn", x, p["wx"].astype(cd))
+    g = jax.nn.gelu(jnp.einsum("bd,dn->bn", x, p["wg"].astype(cd)))
+    u, conv_tail = conv1d_step(u, p["conv_w"].astype(cd), state.conv)
+    y, h = rglru_step(u, p, state.h)
+    out = jnp.einsum("bn,nd->bd", y * g, p["w_out"].astype(cd))
+    return out, RGLRUState(h=h, conv=conv_tail)
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch) — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, dh, dh) wkv state
+    x_prev_att: jnp.ndarray   # (B, D) previous token (time-mix shift)
+    x_prev_ffn: jnp.ndarray   # (B, D) previous token (channel-mix shift)
+
+
+def _timemix_proj(x, x_prev, p, cd):
+    """Token-shift interpolation + r/k/v/w/g projections.
+    x: (B,S,D); x_prev: (B,D) carry from the previous chunk."""
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(cd)  # (5, D): r,k,v,w,g
+    mix = lambda i: x * mu[i][None, None, :] + xs * (1.0 - mu[i][None, None, :])
+    r = jnp.einsum("bsd,dn->bsn", mix(0), p["wr"].astype(cd))
+    k = jnp.einsum("bsd,dn->bsn", mix(1), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dn->bsn", mix(2), p["wv"].astype(cd))
+    w_lo = jnp.einsum("bsd,dr->bsr", mix(3), p["ww_a"].astype(cd))
+    w = jnp.einsum("bsr,rn->bsn", jnp.tanh(w_lo), p["ww_b"].astype(cd))
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))  # data-dependent decay in (0,1)
+    g = jax.nn.silu(jnp.einsum("bsd,dn->bsn", mix(4), p["wg"].astype(cd)))
+    return r, k, v, w.astype(jnp.float32), g, x[:, -1, :]
+
+
+_WKV_CHUNK = 64  # state checkpoint period: backward saves S/64 states, not S
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential wkv over time (f32 state), chunked: the outer scan saves
+    one (B,H,dh,dh) state per chunk for the backward pass and the inner
+    steps are rematerialized (jax.checkpoint) — O(S/C) state memory instead
+    of O(S). Shapes: (B,S,H,dh) -> (B,S,H,dh)."""
+    b, s, h, dh = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,dh)
+        att = state + (kt[..., :, None] * vt[..., None, :]) * u[None, :, :, None]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        state = state * wt[..., :, None] + kt[..., :, None] * vt[..., None, :]
+        return state, yt
+
+    def run(xs, state):
+        return jax.lax.scan(step, state, xs)
+
+    xs = (
+        r.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        w.transpose(1, 0, 2, 3),
+    )
+    if s <= _WKV_CHUNK or s % _WKV_CHUNK != 0:
+        s_fin, ys = run(xs, s0)
+        return ys.transpose(1, 0, 2, 3), s_fin
+
+    nc = s // _WKV_CHUNK
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((nc, _WKV_CHUNK) + a.shape[1:]), xs
+    )
+
+    @jax.checkpoint
+    def chunk_fn(state, xc):
+        st, ys = run(xc, state)
+        return st, ys
+
+    s_fin, ys = jax.lax.scan(chunk_fn, s0, xs_c)
+    ys = ys.reshape((s,) + ys.shape[2:])
+    return ys.transpose(1, 0, 2, 3), s_fin
+
+
+def rwkv_timemix_seq(x, p, cfg, state: Optional[RWKVState]):
+    cd = x.dtype
+    b, s, d = x.shape
+    dh = cfg.rwkv.head_dim
+    h = d // dh
+    x_prev = state.x_prev_att if state is not None else jnp.zeros((b, d), cd)
+    r, k, v, w, g, x_last = _timemix_proj(x, x_prev, p, cd)
+    rs = r.reshape(b, s, h, dh).astype(jnp.float32)
+    ks = k.reshape(b, s, h, dh).astype(jnp.float32)
+    vs = v.reshape(b, s, h, dh).astype(jnp.float32)
+    ws = w.reshape(b, s, h, dh)
+    u = p["u"].astype(jnp.float32)  # (H, dh)
+    s0 = (
+        state.s if state is not None else jnp.zeros((b, h, dh, dh), jnp.float32)
+    )
+    y, s_fin = _wkv_scan(rs, ks, vs, ws, u, s0)
+    y = y.reshape(b, s, d).astype(cd) * g
+    out = jnp.einsum("bsn,nd->bsd", y, p["w_out"].astype(cd))
+    return out, s_fin, x_last
+
+
+def rwkv_channelmix(x, x_prev, p, cd):
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu_c"].astype(cd)  # (2, D)
+    xk = x * mu[0][None, None] + xs * (1 - mu[0][None, None])
+    xr = x * mu[1][None, None] + xs * (1 - mu[1][None, None])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk_c"].astype(cd))
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["wv_c"].astype(cd))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,dn->bsn", xr, p["wr_c"].astype(cd)))
+    return r * v, x[:, -1, :]

@@ -1,0 +1,527 @@
+"""Model forward passes: causal LM (all decoder archs), encoder-decoder
+(whisper), with scan-over-layers, remat, KV/recurrent caches, and sharding
+constraints injected via a ``constrain(tensor, kind)`` callable.
+
+Entry points:
+  forward_lm(params, cfg, batch, constrain)         -> logits (train/prefill)
+  loss_fn(params, cfg, batch, constrain)            -> scalar CE loss
+  init_cache(cfg, batch_size, max_len, dtype)       -> stacked decode cache
+  decode_step(params, cfg, tokens, cache, constrain)-> logits, new cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    KVCache,
+    MLACache,
+    cross_attention,
+    gqa,
+    mla,
+)
+from repro.models.config import ModelConfig
+from repro.models.init import block_pattern
+from repro.models.layers import rms_norm, swiglu
+from repro.models.moe import moe_layer
+from repro.models.recurrent import (
+    RGLRUState,
+    RWKVState,
+    rglru_block_seq,
+    rglru_block_step,
+    rwkv_channelmix,
+    rwkv_timemix_seq,
+)
+
+_ID = lambda t, kind: t
+
+
+def _z():
+    return jnp.zeros((), jnp.int32)
+
+
+def _i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# blocks (sequence mode)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(x, p, cfg, positions, window, constrain, cache=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, new_cache = mla(h, p, cfg, positions, cache, constrain)
+    else:
+        a, new_cache = gqa(h, p, cfg, positions, cache, window, constrain)
+    a = constrain(a, "partial_out")
+    x = constrain(x + a, "act")
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f = moe_layer(h, p, cfg)
+    else:
+        f = swiglu(h, p["w1"], p["w3"], p["w2"], x.dtype)
+    f = constrain(f, "partial_out")
+    return constrain(x + f, "act"), new_cache
+
+
+def _rec_block(x, p, cfg, constrain, state: Optional[RGLRUState] = None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if state is None:
+        r = rglru_block_seq(h, p, cfg)
+        new_state = None
+    else:
+        r, new_state = rglru_block_step(h[:, 0, :], p, cfg, state)
+        r = r[:, None, :]
+    x = constrain(x + r.astype(x.dtype), "act")
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    f = swiglu(h, p["w1"], p["w3"], p["w2"], x.dtype)
+    return constrain(x + f, "act"), new_state
+
+
+def _rwkv_block(x, p, cfg, constrain, state: Optional[RWKVState] = None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, s_fin, x_last_att = rwkv_timemix_seq(h, p, cfg, state)
+    x = constrain(x + att, "act")
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    prev_c = (
+        state.x_prev_ffn
+        if state is not None
+        else jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+    )
+    ffn, x_last_ffn = rwkv_channelmix(h2, prev_c, p, x.dtype)
+    x = constrain(x + ffn, "act")
+    new_state = RWKVState(s=s_fin, x_prev_att=x_last_att, x_prev_ffn=x_last_ffn)
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg, batch, constrain):
+    cd = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cd)[tokens]
+    if cfg.vlm is not None and "image_embeds" in batch:
+        img = jnp.einsum(
+            "bpd,de->bpe",
+            batch["image_embeds"].astype(cd),
+            params["img_proj"].astype(cd),
+        )
+        x = jnp.concatenate([img, x], axis=1)
+    return constrain(x, "act")
+
+
+def _logits(params, cfg, x, constrain):
+    cd = x.dtype
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(cd)
+    return constrain(jnp.einsum("bsd,dv->bsv", x, head), "logits")
+
+
+# ---------------------------------------------------------------------------
+# decoder-only LM
+# ---------------------------------------------------------------------------
+
+
+def _scan_layers(params, cfg, x, positions, constrain, remat: bool):
+    pattern = block_pattern(cfg)
+
+    def group_fn(x, gp):
+        for gi, kind in enumerate(pattern):
+            p = gp[f"blk{gi}_{kind}"]
+            if kind == "attn":
+                window = cfg.rglru.attn_window if cfg.rglru is not None else 0
+                x, _ = _attn_block(x, p, cfg, positions, window, constrain)
+            elif kind == "rec":
+                x, _ = _rec_block(x, p, cfg, constrain)
+            elif kind == "rwkv":
+                x, _ = _rwkv_block(x, p, cfg, constrain)
+        return x, None
+
+    fn = group_fn
+    if remat and cfg.remat == "block":
+        fn = jax.checkpoint(group_fn)
+    x, _ = jax.lax.scan(fn, x, params["layers"])
+    return x
+
+
+def forward_lm(params, cfg: ModelConfig, batch, constrain=_ID, remat=True):
+    if cfg.encdec is not None:
+        return _forward_encdec(params, cfg, batch, constrain, remat)
+    x = _embed_inputs(params, cfg, batch, constrain)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+    x = _scan_layers(params, cfg, x, positions, constrain, remat)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, x, constrain)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, constrain=_ID, remat=True):
+    logits = forward_lm(params, cfg, batch, constrain, remat)
+    if cfg.encdec is not None:
+        targets = batch["dec_tokens"][:, 1:]
+        logits = logits[:, :-1]
+    else:
+        s_txt = batch["tokens"].shape[1]
+        logits = logits[:, -s_txt:]  # vlm image prefix is unsupervised
+        targets = batch["tokens"][:, 1:]
+        logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _forward_encdec(params, cfg, batch, constrain, remat):
+    cd = jnp.dtype(cfg.compute_dtype)
+    frames = constrain(batch["enc_frames"].astype(cd), "act")  # stub frontend
+    pos_e = jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :]
+    # encoder: bidirectional attention
+    enc_pos = params["enc_pos"][: frames.shape[1]].astype(cd)
+    x = frames + enc_pos[None]
+
+    def enc_fn(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = gqa(h, p, cfg, pos_e, None, 0, constrain, causal=False)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        return constrain(x + swiglu(h, p["w1"], p["w3"], p["w2"], cd), "act"), None
+
+    fn = jax.checkpoint(enc_fn) if remat and cfg.remat == "block" else enc_fn
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    enc_out = rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # decoder
+    dt = params["embed"].astype(cd)[batch["dec_tokens"]]
+    pos_d = jnp.arange(dt.shape[1], dtype=jnp.int32)[None, :]
+    y = dt
+
+    def dec_fn(y, p):
+        h = rms_norm(y, p["ln1"], cfg.norm_eps)
+        a, _ = gqa(h, p, cfg, pos_d, None, 0, constrain)
+        y = y + a
+        h = rms_norm(y, p["ln_x"], cfg.norm_eps)
+        k = jnp.einsum("btd,dn->btn", enc_out, p["wk_x"].astype(cd))
+        v = jnp.einsum("btd,dn->btn", enc_out, p["wv_x"].astype(cd))
+        b, t = k.shape[:2]
+        kv = (
+            k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim),
+        )
+        y = y + cross_attention(h, kv, p, cfg, constrain)
+        h = rms_norm(y, p["ln2"], cfg.norm_eps)
+        return constrain(y + swiglu(h, p["w1"], p["w3"], p["w2"], cd), "act"), None
+
+    fn = jax.checkpoint(dec_fn) if remat and cfg.remat == "block" else dec_fn
+    y, _ = jax.lax.scan(fn, y, params["dec_layers"])
+    y = rms_norm(y, params["final_norm"], cfg.norm_eps)
+    return _logits(params, cfg, y, constrain)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+class DecodeCache(NamedTuple):
+    """Stacked (over layer groups) per-kind caches; unused kinds are ()."""
+
+    kv: Any
+    mla: Any
+    rec: Any
+    rwkv: Any
+    enc_kv: Any  # whisper cross-attention K/V (precomputed at prefill)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=None):
+    """Concrete zeros cache (serve loop); shapes mirror abstract_cache."""
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd.shape, sd.dtype),
+        abstract_cache(cfg, batch, max_len, cache_dtype),
+    )
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=None):
+    """ShapeDtypeStruct cache for the dry-run."""
+    cd = jnp.dtype(cache_dtype or cfg.compute_dtype)
+    i32 = jnp.dtype("int32")
+    f32 = jnp.dtype("float32")
+    pattern = block_pattern(cfg)
+    sds = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+
+    if cfg.encdec is not None:
+        e = cfg.encdec
+        ld = e.n_dec_layers
+        nkv = cfg.n_kv_heads
+        return DecodeCache(
+            kv={
+                "k": sds((ld, batch, max_len, nkv, cfg.head_dim), cd),
+                "v": sds((ld, batch, max_len, nkv, cfg.head_dim), cd),
+                "len": sds((), i32),
+            },
+            mla=(),
+            rec=(),
+            rwkv=(),
+            enc_kv={
+                "k": sds((ld, batch, 1500, nkv, cfg.head_dim), cd),
+                "v": sds((ld, batch, 1500, nkv, cfg.head_dim), cd),
+            },
+        )
+
+    groups = cfg.n_layers // len(pattern)
+    out = {"kv": (), "mla": (), "rec": (), "rwkv": (), "enc_kv": ()}
+    n_attn = sum(1 for k in pattern if k == "attn")
+    n_rec = sum(1 for k in pattern if k == "rec")
+    n_rwkv = sum(1 for k in pattern if k == "rwkv")
+    if cfg.mla is not None and n_attn:
+        m = cfg.mla
+        out["mla"] = {
+            "ckv": sds((groups, n_attn, batch, max_len, m.kv_lora_rank), cd),
+            "krope": sds((groups, n_attn, batch, max_len, m.rope_head_dim), cd),
+            "len": sds((), i32),
+        }
+    elif n_attn:
+        window = cfg.rglru.attn_window if cfg.rglru is not None else 0
+        t = min(max_len, window) if window else max_len
+        out["kv"] = {
+            "k": sds((groups, n_attn, batch, t, cfg.n_kv_heads, cfg.head_dim), cd),
+            "v": sds((groups, n_attn, batch, t, cfg.n_kv_heads, cfg.head_dim), cd),
+            "len": sds((), i32),
+        }
+    if n_rec:
+        r = cfg.rglru
+        n = r.d_rnn or cfg.d_model
+        out["rec"] = {
+            "h": sds((groups, n_rec, batch, n), f32),
+            "conv": sds((groups, n_rec, batch, r.conv_width - 1, n), cd),
+        }
+    if n_rwkv:
+        dh = cfg.rwkv.head_dim
+        h = cfg.d_model // dh
+        out["rwkv"] = {
+            "s": sds((groups, n_rwkv, batch, h, dh, dh), f32),
+            "att": sds((groups, n_rwkv, batch, cfg.d_model), cd),
+            "ffn": sds((groups, n_rwkv, batch, cfg.d_model), cd),
+        }
+    return DecodeCache(**out)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: DecodeCache, constrain=_ID):
+    """One decode step: tokens (B, 1) -> logits (B, 1, V), updated cache.
+    For whisper, tokens are decoder tokens and enc_kv must be prefilled."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"].astype(cd)[tokens]
+    x = constrain(x, "act")
+
+    if cfg.encdec is not None:
+        return _decode_encdec(params, cfg, x, cache, constrain)
+
+    pattern = block_pattern(cfg)
+    length = None
+    if cache.kv != ():
+        length = cache.kv["len"]
+    elif cache.mla != ():
+        length = cache.mla["len"]
+    positions = (
+        (length if length is not None else jnp.int32(0))
+        + jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    )[None, :]
+
+    def group_fn(x, layer):
+        gp, gcache = layer
+        new_cache = {}
+        ai = ri = wi = 0
+        for gi, kind in enumerate(pattern):
+            p = gp[f"blk{gi}_{kind}"]
+            if kind == "attn":
+                if cfg.mla is not None:
+                    c = MLACache(
+                        gcache["mla"]["ckv"][ai],
+                        gcache["mla"]["krope"][ai],
+                        length,
+                    )
+                    x, nc = _attn_block(x, p, cfg, positions, 0, constrain, c)
+                    new_cache.setdefault("mla", {"ckv": [], "krope": []})
+                    new_cache["mla"]["ckv"].append(nc.ckv)
+                    new_cache["mla"]["krope"].append(nc.krope)
+                else:
+                    window = cfg.rglru.attn_window if cfg.rglru is not None else 0
+                    kv_len = gcache["kv"]["k"][ai].shape[1]
+                    # sliding-window cache: position within ring buffer
+                    eff_len = length % kv_len if window else length
+                    c = KVCache(
+                        gcache["kv"]["k"][ai], gcache["kv"]["v"][ai], eff_len
+                    )
+                    # window masking uses absolute positions
+                    x, nc = _attn_block_decode_abs(
+                        x, p, cfg, positions, window, constrain, c, length
+                    )
+                    new_cache.setdefault("kv", {"k": [], "v": []})
+                    new_cache["kv"]["k"].append(nc.k)
+                    new_cache["kv"]["v"].append(nc.v)
+                ai += 1
+            elif kind == "rec":
+                st = RGLRUState(
+                    gcache["rec"]["h"][ri], gcache["rec"]["conv"][ri]
+                )
+                x2, nst = _rec_block(x, p, cfg, constrain, st)
+                x = x2
+                new_cache.setdefault("rec", {"h": [], "conv": []})
+                new_cache["rec"]["h"].append(nst.h)
+                new_cache["rec"]["conv"].append(nst.conv)
+                ri += 1
+            elif kind == "rwkv":
+                st = RWKVState(
+                    gcache["rwkv"]["s"][wi],
+                    gcache["rwkv"]["att"][wi],
+                    gcache["rwkv"]["ffn"][wi],
+                )
+                x, nst = _rwkv_block(x, p, cfg, constrain, st)
+                new_cache.setdefault("rwkv", {"s": [], "att": [], "ffn": []})
+                new_cache["rwkv"]["s"].append(nst.s)
+                new_cache["rwkv"]["att"].append(nst.x_prev_att)
+                new_cache["rwkv"]["ffn"].append(nst.x_prev_ffn)
+                wi += 1
+        stacked = {
+            k: {kk: jnp.stack(vv) for kk, vv in v.items()}
+            for k, v in new_cache.items()
+        }
+        return x, stacked
+
+    gcaches = {}
+    if cache.kv != ():
+        gcaches["kv"] = {"k": cache.kv["k"], "v": cache.kv["v"]}
+    if cache.mla != ():
+        gcaches["mla"] = {"ckv": cache.mla["ckv"], "krope": cache.mla["krope"]}
+    if cache.rec != ():
+        gcaches["rec"] = cache.rec
+    if cache.rwkv != ():
+        gcaches["rwkv"] = cache.rwkv
+
+    x, new_gcaches = jax.lax.scan(group_fn, x, (params["layers"], gcaches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x, constrain)
+
+    s = tokens.shape[1]
+    newc = DecodeCache(
+        kv=(
+            {**new_gcaches["kv"], "len": cache.kv["len"] + s}
+            if cache.kv != ()
+            else ()
+        ),
+        mla=(
+            {**new_gcaches["mla"], "len": cache.mla["len"] + s}
+            if cache.mla != ()
+            else ()
+        ),
+        rec=new_gcaches.get("rec", ()),
+        rwkv=new_gcaches.get("rwkv", ()),
+        enc_kv=(),
+    )
+    return logits, newc
+
+
+def _attn_block_decode_abs(x, p, cfg, positions, window, constrain, cache, abs_len):
+    """GQA decode step; for sliding-window layers the cache is a ring buffer
+    of size window and masking uses absolute positions."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    b, s, d = h.shape
+    dh = cfg.head_dim
+    cd = h.dtype
+    q = jnp.einsum("bsd,dn->bsn", h, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dn->bsn", h, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dn->bsn", h, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"].astype(cd), k + p["bk"].astype(cd), v + p["bv"].astype(cd)
+    q = q.reshape(b, s, cfg.n_heads_eff, dh)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh)
+    from repro.models.layers import rope as _rope
+
+    q = _rope(q, positions, cfg.rope_theta, cfg.rope_frac)
+    k = _rope(k, positions, cfg.rope_theta, cfg.rope_frac)
+    t = cache.k.shape[1]
+    k_all = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (_z(), _i32(cache.length), _z(), _z())
+    )
+    v_all = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (_z(), _i32(cache.length), _z(), _z())
+    )
+    if window:
+        # ring buffer: slot i holds absolute position p where p % t == i
+        slot_pos = jnp.arange(t)[None, :]
+        cycle = (abs_len // t) * t
+        abs_pos = jnp.where(
+            slot_pos <= (abs_len % t), cycle + slot_pos, cycle - t + slot_pos
+        )
+        q_pos = abs_len
+        ok = (abs_pos >= 0) & (abs_pos <= q_pos) & (abs_pos > q_pos - window)
+        mask = jnp.broadcast_to(jnp.where(ok, 0.0, -2.0e38), (s, t))
+    else:
+        from repro.models.attention import _causal_mask, NEG_INF
+
+        mask = _causal_mask(s, t, cache.length)
+        written = jnp.arange(t)[None, :] < (cache.length + s)
+        mask = jnp.where(written, mask, NEG_INF)
+    from repro.models.attention import attention_core
+
+    a = attention_core(q, k_all.astype(cd), v_all.astype(cd), mask, cfg.attn_logit_softcap)
+    a = a.reshape(b, s, cfg.n_heads_eff * dh)
+    att = jnp.einsum("bsn,nd->bsd", a, p["wo"].astype(cd))
+    x = constrain(x + att, "act")
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f = moe_layer(h, p, cfg)
+    else:
+        f = swiglu(h, p["w1"], p["w3"], p["w2"], x.dtype)
+    return constrain(x + f, "act"), KVCache(k_all, v_all, cache.length)
+
+
+def _decode_encdec(params, cfg, x, cache: DecodeCache, constrain):
+    cd = x.dtype
+    length = cache.kv["len"]
+    positions = (length + jnp.arange(x.shape[1], dtype=jnp.int32))[None, :]
+
+    def dec_fn(y, layer):
+        p, kc, vc, xk, xv = layer
+        h = rms_norm(y, p["ln1"], cfg.norm_eps)
+        a, nc = gqa(h, p, cfg, positions, KVCache(kc, vc, length), 0, constrain)
+        y = y + a
+        h = rms_norm(y, p["ln_x"], cfg.norm_eps)
+        y = y + cross_attention(h, (xk, xv), p, cfg, constrain)
+        h = rms_norm(y, p["ln2"], cfg.norm_eps)
+        y = constrain(y + swiglu(h, p["w1"], p["w3"], p["w2"], cd), "act")
+        return y, (nc.k, nc.v)
+
+    y, (ks, vs) = jax.lax.scan(
+        dec_fn,
+        x,
+        (
+            params["dec_layers"],
+            cache.kv["k"],
+            cache.kv["v"],
+            cache.enc_kv["k"],
+            cache.enc_kv["v"],
+        ),
+    )
+    y = rms_norm(y, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, y, constrain)
+    newc = DecodeCache(
+        kv={"k": ks, "v": vs, "len": length + x.shape[1]},
+        mla=(),
+        rec=(),
+        rwkv=(),
+        enc_kv=cache.enc_kv,
+    )
+    return logits, newc

@@ -1,0 +1,3 @@
+from repro.parallel.partition import ShardingStrategy
+
+__all__ = ["ShardingStrategy"]

@@ -1,0 +1,220 @@
+"""Logical-axis -> PartitionSpec rules (the sharding strategy layer).
+
+Weights carry logical axis names in their ParamDesc (repro/models/init.py);
+a strategy maps names to mesh axes with divisibility checks and first-use
+deduplication (a mesh axis appears at most once per spec). Activations get
+constraints through the ``constrain(tensor, kind)`` callable that the model
+forward threads through.
+
+Strategies (selectable per arch / per hillclimb iteration):
+  tp_fsdp   — default: TP on ffn/heads/vocab/experts over `model`, FSDP
+              storage sharding over `data` on the embed dim, DP over
+              (`pod`, `data`) on batch.
+  fsdp_only — no tensor parallelism (all `model`-dim rules -> None). Used by
+              hillclimbs to isolate collective costs.
+  tp_seq    — tp_fsdp + sequence-sharded activations (long-context cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.init import ParamDesc, param_descriptors
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@dataclasses.dataclass
+class ShardingStrategy:
+    cfg: ModelConfig
+    mesh: Any
+    strategy: str = "tp_fsdp"
+    # per-cell activation batch size (drop batch sharding when indivisible)
+    batch_size: Optional[int] = None
+    seq_shard: bool = False  # shard sequence dim of activations (tp_seq)
+
+    def __post_init__(self):
+        m = self.mesh
+        self._model = m.shape.get("model", 1)
+        self._batch_axes = batch_axes(m)
+        if self.strategy == "dp_fsdp":
+            # no tensor parallelism: the model axis joins data parallelism
+            self._batch_axes = self._batch_axes + ("model",)
+            self._model = 1
+        self._data = int(np.prod([m.shape[a] for a in self._batch_axes]))
+        self._tp = self.strategy not in ("fsdp_only", "dp_fsdp")
+        md = "model" if self._tp else None
+        fsdp_axes = (
+            ("data", "model") if self.strategy == "dp_fsdp" else "data"
+        )
+        cfgv = self.cfg
+        self.rules: Dict[str, Optional[str]] = {
+            "vocab": md if cfgv.vocab % self.mesh.shape.get("model", 1) == 0 else None,
+            "embed": fsdp_axes,
+            "embed_out": None,
+            "heads": md,
+            "kv": md,
+            "ffn": md,
+            "ffn_e": None,
+            "experts": md,
+            "lora": None,
+            "rnn": md,
+            "rnn2": None,
+            "rwkv_heads": None,
+            "layers": None,
+            None: None,
+        }
+        # divisibility guards for flat projection dims
+        if (cfgv.n_heads_eff * cfgv.head_dim) % self._model != 0:
+            self.rules["heads"] = None
+        if (cfgv.n_kv_heads * cfgv.head_dim) % self._model != 0:
+            self.rules["kv"] = None
+        if cfgv.d_ff % self._model != 0:
+            self.rules["ffn"] = None
+        if cfgv.moe and cfgv.moe.n_experts % self._model != 0:
+            self.rules["experts"] = None
+        if cfgv.rglru and (cfgv.rglru.d_rnn or cfgv.d_model) % self._model != 0:
+            self.rules["rnn"] = None
+
+    # -- parameter specs -----------------------------------------------------
+    def _spec_for_axes(self, axes: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        used = set()
+        out = []
+        for ax, dim in zip(axes, shape):
+            mesh_ax = self.rules.get(ax, None)
+            parts = (
+                mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            ) if mesh_ax is not None else ()
+            if any(p in used for p in parts):
+                mesh_ax = None
+                parts = ()
+            size = int(np.prod([self.mesh.shape[p] for p in parts])) if parts else 1
+            if parts and dim % size != 0:
+                mesh_ax = None
+                parts = ()
+            used.update(parts)
+            out.append(mesh_ax)
+        return P(*out)
+
+    def param_specs(self):
+        desc = param_descriptors(self.cfg)
+        return jax.tree_util.tree_map(
+            lambda pd: self._spec_for_axes(pd.axes, pd.shape),
+            desc,
+            is_leaf=lambda x: isinstance(x, ParamDesc),
+        )
+
+    def param_shardings(self):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.param_specs()
+        )
+
+    # -- activation constraints ----------------------------------------------
+    def _bax(self):
+        b = self.batch_size
+        ax = self._batch_axes
+        if b is None or not ax or b % self._data != 0:
+            return None
+        return ax
+
+    def act_spec(self, kind: str, ndim: int) -> Optional[P]:
+        bax = self._bax()
+        md = self._model
+        cfgv = self.cfg
+        seq = "model" if (self.seq_shard and self._tp) else None
+        if kind == "act":
+            return P(bax, seq, None)
+        if kind == "partial_out":
+            # matmul psum output: S-sharded => XLA emits reduce-scatter
+            # instead of all-reduce (Megatron sequence parallelism)
+            return P(bax, seq, None) if seq is not None else None
+        if kind == "logits":
+            tp = self.rules["vocab"]
+            return P(bax, seq if tp is None else None, tp)
+        if kind == "heads4d":
+            tp = "model" if (self._tp and cfgv.n_heads_eff % md == 0) else None
+            return P(bax, None, tp, None)
+        if kind == "kv4d":
+            tp = "model" if (self._tp and cfgv.n_kv_heads % md == 0) else None
+            return P(bax, None, tp, None)
+        return None
+
+    def make_constrain(self):
+        mesh = self.mesh
+
+        def constrain(t, kind):
+            spec = self.act_spec(kind, t.ndim)
+            if spec is None:
+                return t
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, spec)
+            )
+
+        return constrain
+
+    # -- batch / cache specs ---------------------------------------------------
+    def batch_specs(self, batch_tree):
+        bax = self._bax()
+
+        def one(sd):
+            return NamedSharding(
+                self.mesh, P(bax, *(None,) * (len(sd.shape) - 1))
+            )
+
+        return jax.tree_util.tree_map(one, batch_tree)
+
+    def cache_specs(self, cache_tree, decode_batch: int):
+        """Decode caches: batch over data axes; the long time dim over
+        `model` (KV/MLA); recurrent state width over `model`."""
+        mesh = self.mesh
+        bax = batch_axes(mesh)
+        bshard = bax if decode_batch % self._data == 0 else None
+        md = self._model
+
+        def one(path, sd):
+            name = "/".join(
+                str(getattr(p, "key", getattr(p, "name", p))) for p in path
+            )
+            nd = len(sd.shape)
+            if nd == 0:
+                return NamedSharding(mesh, P())
+            spec = [None] * nd
+            if "kv/k" in name or "kv/v" in name:
+                # (..., B, T, Hkv, dh)
+                spec[-4] = bshard
+                if sd.shape[-2] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-2] = "model"  # heads
+                elif sd.shape[-3] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-3] = "model"  # sequence
+            elif "mla/ckv" in name or "mla/krope" in name:
+                spec[-3] = bshard
+                if sd.shape[-2] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-2] = "model"  # sequence dim of the latent cache
+            elif "rec/h" in name:
+                spec[-2] = bshard
+                if sd.shape[-1] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-1] = "model"
+            elif "rec/conv" in name:
+                spec[-3] = bshard
+                if sd.shape[-1] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-1] = "model"
+            elif "rwkv/s" in name:
+                spec[-4] = bshard
+                if sd.shape[-3] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-3] = "model"
+            elif "rwkv/att" in name or "rwkv/ffn" in name:
+                spec[-2] = bshard
+            elif "enc_kv" in name:
+                spec[-4] = bshard
+                if sd.shape[-2] % md == 0 and self.strategy != "fsdp_only":
+                    spec[-2] = "model"
+            return NamedSharding(mesh, P(*spec))
+
+        return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, PrefixCacheIndex
+
+__all__ = ["ServeEngine", "PrefixCacheIndex"]

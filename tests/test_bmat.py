@@ -1,0 +1,118 @@
+"""BMAT: rank oracle, merge semantics, tombstones, growth — both tree types."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401
+from repro.core.bmat import BMAT, BPMAT, RBMAT, KEY_MAX
+from tests.conftest import make_keys
+
+
+@pytest.mark.parametrize("tt", [RBMAT, BPMAT])
+def test_rank_matches_searchsorted(tt):
+    keys = make_keys(5000, 7)
+    b = BMAT(tt)
+    b.merge(keys, keys + 1)
+    q = np.random.default_rng(8).integers(0, 1 << 48, 3000).astype(np.int64)
+    got = b.rank(q)
+    want = np.searchsorted(keys, q, side="left")
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("tt", [RBMAT, BPMAT])
+def test_lookup_and_value_update(tt):
+    keys = make_keys(2000, 9)
+    b = BMAT(tt)
+    b.merge(keys, keys * 2)
+    f, v = b.lookup(keys[::3])
+    assert f.all() and np.array_equal(v, keys[::3] * 2)
+    # overwrite values
+    b.merge(keys[:100], keys[:100] * 5)
+    f, v = b.lookup(keys[:100])
+    assert f.all() and np.array_equal(v, keys[:100] * 5)
+    assert b.size == len(keys)  # no duplicates created
+    # absent keys
+    absent = np.setdiff1d(
+        np.random.default_rng(1).integers(0, 1 << 48, 500), keys
+    )
+    f, _ = b.lookup(absent)
+    assert not f.any()
+
+
+@pytest.mark.parametrize("tt", [RBMAT, BPMAT])
+def test_batch_dedup_last_wins(tt):
+    b = BMAT(tt)
+    k = np.asarray([5, 5, 9, 9, 9], dtype=np.int64)
+    v = np.asarray([1, 2, 3, 4, 5], dtype=np.int64)
+    b.merge(k, v)
+    f, vals = b.lookup(np.asarray([5, 9], dtype=np.int64))
+    assert f.all()
+    assert vals[0] == 2 and vals[1] == 5
+    assert b.size == 2
+
+
+def test_tombstone_delete_and_compact():
+    keys = make_keys(1000, 11)
+    b = BMAT(BPMAT)
+    b.merge(keys, keys)
+    hit = b.delete(keys[:200])
+    assert hit.all()
+    f, _ = b.lookup(keys[:200])
+    assert not f.any()
+    f, _ = b.lookup(keys[200:])
+    assert f.all()
+    b.compact()
+    assert b.size == 800
+    f, _ = b.lookup(keys[200:])
+    assert f.all()
+
+
+def test_growth_preserves_content():
+    b = BMAT(BPMAT, capacity=4096)
+    all_keys = []
+    r = np.random.default_rng(13)
+    for i in range(6):
+        ks = np.unique(r.integers(0, 1 << 48, 3000).astype(np.int64))
+        ks = np.setdiff1d(ks, np.asarray(all_keys, dtype=np.int64))
+        b.merge(ks, ks + i)
+        all_keys.extend(ks.tolist())
+    ak = np.asarray(sorted(all_keys), dtype=np.int64)
+    assert b.size == len(ak)
+    f, _ = b.lookup(ak[:: max(len(ak) // 500, 1)])
+    assert f.all()
+
+
+def test_switch_type_equivalence():
+    keys = make_keys(3000, 17)
+    b = BMAT(RBMAT)
+    b.merge(keys, keys)
+    q = np.random.default_rng(18).integers(0, 1 << 48, 1000).astype(np.int64)
+    r1 = b.rank(q)
+    b.switch_type()
+    assert b.tree_type == BPMAT
+    r2 = b.rank(q)
+    assert np.array_equal(r1, r2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    tt=st.sampled_from([RBMAT, BPMAT]),
+    batches=st.integers(1, 5),
+)
+def test_rank_property(seed, tt, batches):
+    r = np.random.default_rng(seed)
+    b = BMAT(tt)
+    oracle = {}
+    for _ in range(batches):
+        ks = r.integers(0, 1 << 30, r.integers(1, 400)).astype(np.int64)
+        vs = r.integers(0, 1 << 30, len(ks)).astype(np.int64)
+        b.merge(ks, vs)
+        for k, v in zip(ks.tolist(), vs.tolist()):
+            oracle[k] = v
+    sk = np.asarray(sorted(oracle), dtype=np.int64)
+    q = r.integers(0, 1 << 30, 200).astype(np.int64)
+    assert np.array_equal(b.rank(q), np.searchsorted(sk, q, "left"))
+    f, v = b.lookup(sk)
+    assert f.all()
+    assert np.array_equal(v, np.asarray([oracle[k] for k in sk.tolist()]))

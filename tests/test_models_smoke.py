@@ -1,0 +1,130 @@
+"""Per-arch smoke tests (required deliverable f): reduced same-family config,
+one forward/train step on CPU, output shapes + finite values. Plus decode
+consistency: teacher-forced forward logits == step-by-step decode logits."""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — x64 on, as in the full system
+import jax
+import jax.numpy as jnp
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import (
+    decode_step,
+    forward_lm,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+
+
+def _batch(cfg, rng, B=2, S=24):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.vlm is not None:
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.vlm.n_image_tokens, cfg.d_model)),
+            jnp.float32,
+        )
+    if cfg.encdec is not None:
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.d_model)), jnp.float32
+        )
+        batch["dec_tokens"] = batch.pop("tokens")
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = smoke_config(arch)
+    rng = np.random.default_rng(1)
+    params = init_params(cfg, 0)
+    batch = _batch(cfg, rng)
+    logits = forward_lm(params, cfg, batch)
+    B = 2
+    S = 24
+    exp_s = S if cfg.encdec is None and cfg.vlm is None else None
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab
+    if exp_s:
+        assert logits.shape[1] == exp_s
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gsq = sum(
+        float(jnp.sum(g.astype(jnp.float32) ** 2))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    assert np.isfinite(gsq) and gsq > 0
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen1-5-110b",
+                                  "recurrentgemma-2b", "rwkv6-1-6b",
+                                  "deepseek-v2-236b", "qwen3-moe-30b-a3b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced logits == token-by-token decode logits (cache proof)."""
+    import dataclasses
+
+    cfg = smoke_config(arch)
+    if cfg.moe is not None:
+        # capacity drops legitimately differ between teacher-forced and
+        # per-token decode; remove drops to compare the cache math itself
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0)
+        )
+    rng = np.random.default_rng(2)
+    params = init_params(cfg, 0)
+    B, S = 1, 12
+    toks = rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)
+    full = np.asarray(
+        forward_lm(params, cfg, {"tokens": jnp.asarray(toks)}, remat=False),
+        np.float32,
+    )
+    cache = init_cache(cfg, B, 32)
+    step_logits = []
+    for i in range(S):
+        lg, cache = decode_step(params, cfg, jnp.asarray(toks[:, i : i + 1]), cache)
+        step_logits.append(np.asarray(lg[:, 0], np.float32))
+    stepped = np.stack(step_logits, axis=1)
+    np.testing.assert_allclose(full, stepped, rtol=0.15, atol=0.15)
+    # ranking agreement at every position (bf16-noise tolerant)
+    agree = (full.argmax(-1) == stepped.argmax(-1)).mean()
+    assert agree >= 0.9
+
+
+def test_full_configs_param_counts():
+    """Full (published) configs: analytic n_params in the expected range."""
+    expect = {
+        "qwen1-5-110b": (90e9, 130e9),
+        "granite-20b": (15e9, 30e9),  # SwiGLU reading of "llama-arch"
+        "phi4-mini-3-8b": (2.5e9, 5e9),
+        "deepseek-7b": (5e9, 9e9),
+        "deepseek-v2-236b": (180e9, 280e9),
+        "qwen3-moe-30b-a3b": (22e9, 40e9),
+        "rwkv6-1-6b": (1.0e9, 2.4e9),
+        "recurrentgemma-2b": (2e9, 4.5e9),
+        "whisper-small": (0.15e9, 0.5e9),
+        "llava-next-34b": (28e9, 42e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_ragged_matches_dense():
+    import dataclasses
+
+    cfg = smoke_config("qwen3-moe-30b-a3b")
+    cfg_r = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="ragged",
+                                     capacity_factor=8.0)
+    )
+    cfg_d = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+    )
+    rng = np.random.default_rng(3)
+    params = init_params(cfg, 0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
+    ld = np.asarray(forward_lm(params, cfg_d, batch, remat=False), np.float32)
+    lr = np.asarray(forward_lm(params, cfg_r, batch, remat=False), np.float32)
+    # with a capacity factor high enough that nothing drops, both dispatches
+    # compute the same function (bf16 accumulation noise aside)
+    np.testing.assert_allclose(ld, lr, rtol=0.12, atol=0.12)
+    assert (ld.argmax(-1) == lr.argmax(-1)).mean() >= 0.9

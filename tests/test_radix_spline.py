@@ -1,0 +1,70 @@
+"""RadixSpline: error bound, monotonicity, determinism (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core  # noqa: F401 — x64
+import jax.numpy as jnp
+from repro.core.radix_spline import build_radix_spline, rs_predict
+from tests.conftest import make_keys
+
+
+@pytest.mark.parametrize("max_error", [8, 24, 64])
+@pytest.mark.parametrize("dist", ["uniform", "clustered"])
+def test_error_bound(max_error, dist):
+    r = np.random.default_rng(1)
+    if dist == "uniform":
+        keys = make_keys(20000, 1)
+    else:
+        centers = r.integers(0, 1 << 48, 40)
+        keys = np.unique(
+            (centers[:, None] + r.integers(0, 4096, (40, 600))).reshape(-1)
+        ).astype(np.int64)
+    pos = np.arange(len(keys)) * 3  # gapped positions
+    model, static = build_radix_spline(keys, pos, max_error=max_error)
+    pred = np.asarray(rs_predict(model, static, jnp.asarray(keys)))
+    assert np.abs(pred - pos).max() <= max_error + 1e-6
+
+
+def test_monotone_predictions():
+    keys = make_keys(5000, 2)
+    pos = np.arange(len(keys))
+    model, static = build_radix_spline(keys, pos)
+    qs = np.sort(np.random.default_rng(3).integers(0, 1 << 48, 2000))
+    pred = np.asarray(rs_predict(model, static, jnp.asarray(qs)))
+    assert np.all(np.diff(pred) >= -1e-9)
+
+
+def test_build_deterministic():
+    keys = make_keys(3000, 4)
+    pos = np.arange(len(keys))
+    m1, s1 = build_radix_spline(keys, pos)
+    m2, s2 = build_radix_spline(keys, pos)
+    assert s1 == s2
+    assert np.array_equal(np.asarray(m1.spline_keys), np.asarray(m2.spline_keys))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(10, 500),
+    seed=st.integers(0, 10_000),
+    err=st.sampled_from([4, 16, 32]),
+)
+def test_error_bound_property(n, seed, err):
+    keys = make_keys(n, seed)
+    pos = np.cumsum(np.random.default_rng(seed).integers(1, 5, len(keys)))
+    model, static = build_radix_spline(keys, pos.astype(np.int64), max_error=err)
+    pred = np.asarray(rs_predict(model, static, jnp.asarray(keys)))
+    assert np.abs(pred - pos).max() <= err + 1e-6
+
+
+def test_clamped_extrapolation():
+    keys = make_keys(1000, 5)
+    pos = np.arange(len(keys))
+    model, static = build_radix_spline(keys, pos)
+    below = np.asarray(rs_predict(model, static, jnp.asarray([0])))
+    above = np.asarray(
+        rs_predict(model, static, jnp.asarray([int(keys[-1]) + 10**6]))
+    )
+    assert 0 <= below[0] <= len(keys)
+    assert 0 <= above[0] <= len(keys)

@@ -1,0 +1,177 @@
+"""Training loop, optimizer, checkpointing, fault tolerance, compression."""
+import os
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401
+import jax
+import jax.numpy as jnp
+from repro.configs import smoke_config
+from repro.models import init_params, loss_fn
+from repro.parallel import compression as comp
+from repro.train import checkpoint as ckpt
+from repro.train.loop import LoopConfig, SimulatedFailure, run as run_loop
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.train.step import make_train_step, pick_microbatches
+
+
+def _setup(seed=0):
+    cfg = smoke_config("deepseek-7b")
+    params = init_params(cfg, seed)
+    opt = init_opt_state(params)
+    rng = np.random.default_rng(seed)
+
+    def next_batch(step):
+        r = np.random.default_rng(1000 + step)
+        return {"tokens": jnp.asarray(r.integers(0, cfg.vocab, (4, 32)), jnp.int32)}
+
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=100)
+    specs = jax.tree_util.tree_map(lambda _: None, params)
+    step_fn = jax.jit(make_train_step(cfg, lambda t, k: t, specs, ocfg, nm=1))
+    return cfg, params, opt, next_batch, step_fn
+
+
+def test_loss_decreases():
+    cfg, params, opt, next_batch, step_fn = _setup()
+    losses = []
+    batch = next_batch(0)  # overfit one batch: loss must fall fast
+    for _ in range(25):
+        params, opt, loss, _ = step_fn(params, opt, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+
+
+def test_microbatched_step_matches_fused():
+    cfg, params, opt, next_batch, _ = _setup()
+    ocfg = AdamWConfig(lr=1e-3)
+    specs = jax.tree_util.tree_map(lambda _: None, params)
+    s1 = jax.jit(make_train_step(cfg, lambda t, k: t, specs, ocfg, nm=1))
+    s4 = jax.jit(make_train_step(cfg, lambda t, k: t, specs, ocfg, nm=4))
+    b = next_batch(0)
+    p1, o1, l1, _ = s1(params, opt, b)
+    p4, o4, l4, _ = s4(params, opt, b)
+    assert abs(float(l1) - float(l4)) < 5e-2
+    d = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        p1, p4,
+    )
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-2
+
+
+def test_grad_clip():
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    st = init_opt_state(p)
+    cfg = AdamWConfig(grad_clip=1.0, weight_decay=0.0, warmup_steps=0)
+    _, _, m = adamw_update(p, g, st, cfg)
+    assert float(m["grad_norm"]) > 1e5  # measured pre-clip
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, params, opt, next_batch, step_fn = _setup()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, (params, opt), metadata={"note": "x"})
+    (p2, o2), man = ckpt.restore(d, (params, opt))
+    assert man["step"] == 7 and man["metadata"]["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.latest_step(d) == 7
+
+
+def test_checkpoint_gc_and_atomicity(tmp_path):
+    cfg, params, opt, *_ = _setup()
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(d, s, (params, opt), keep_last=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2 and steps[-1].endswith("5".zfill(10))
+    assert not [x for x in os.listdir(d) if x.startswith(".tmp")]
+
+
+def test_resume_after_failure_matches_uninterrupted(tmp_path):
+    """Kill at step 12, restart, final params == uninterrupted run (restart-
+    safe determinism: data + RNG are step-keyed)."""
+    cfg, params0, opt0, next_batch, step_fn = _setup()
+
+    def fresh():
+        return init_params(cfg, 0), init_opt_state(init_params(cfg, 0))
+
+    # uninterrupted
+    p, o = fresh()
+    lc = LoopConfig(total_steps=20, ckpt_every=5,
+                    ckpt_dir=str(tmp_path / "a"), log_every=100)
+    res_a = run_loop(step_fn, p, o, next_batch, lc)
+
+    # interrupted at 12 then resumed
+    p, o = fresh()
+    lc_b = LoopConfig(total_steps=20, ckpt_every=5,
+                      ckpt_dir=str(tmp_path / "b"), fail_at_step=12,
+                      log_every=100)
+    with pytest.raises(SimulatedFailure):
+        run_loop(step_fn, p, o, next_batch, lc_b)
+    p, o = fresh()  # "new process": state comes from the checkpoint
+    lc_b2 = LoopConfig(total_steps=20, ckpt_every=5,
+                       ckpt_dir=str(tmp_path / "b"), log_every=100)
+    res_b = run_loop(step_fn, p, o, next_batch, lc_b2)
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(res_a["params"]),
+        jax.tree_util.tree_leaves(res_b["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_with_new_sharding(tmp_path):
+    """Restore with explicit (different) shardings — the elastic-rescale path."""
+    cfg, params, opt, *_ = _setup()
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, params)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), params
+    )
+    p2, _ = ckpt.restore(d, params, shardings=sh)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_compression_roundtrip_error_bound():
+    r = np.random.default_rng(5)
+    x = jnp.asarray(r.normal(0, 3, (1000,)), jnp.float32)
+    y = comp.compress_roundtrip(x)
+    blk_max = np.abs(np.asarray(x)).reshape(-1, 250 if False else 1).max()
+    err = np.abs(np.asarray(x - y))
+    # per-block bound: scale = blockmax/127 => |err| <= scale/2
+    assert err.max() <= float(np.abs(np.asarray(x)).max()) / 127.0
+
+
+def test_error_feedback_preserves_sum():
+    """Over repeated rounds, EF-compressed grads sum to the true sum."""
+    r = np.random.default_rng(6)
+    g = {"w": jnp.asarray(r.normal(0, 1, (512,)), jnp.float32)}
+    ef = comp.init_ef_state(g)
+    acc = np.zeros(512)
+    for _ in range(50):
+        cg, ef = comp.ef_compress_grads(g, ef)
+        acc += np.asarray(cg["w"])
+    true = 50 * np.asarray(g["w"])
+    # relative drift bounded by one quantization step regardless of rounds
+    assert np.abs(acc - true).max() < np.abs(np.asarray(g["w"])).max() / 100.0
+
+
+def test_wire_bytes_ratio():
+    p = {"w": jnp.zeros((4096,), jnp.float32)}
+    ratio = comp.wire_bytes_f32(p) / comp.wire_bytes_int8(p)
+    assert 3.5 < ratio < 4.0
+
+
+def test_pick_microbatches():
+    assert pick_microbatches(256, 4096, 16) == 8
+    assert pick_microbatches(8, 512, 8) == 1

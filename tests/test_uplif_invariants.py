@@ -1,0 +1,166 @@
+"""UpLIF end-to-end invariants vs a host oracle (unit + hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import repro.core  # noqa: F401
+from repro.core import UpLIF
+from repro.core.uplif import UpLIFConfig
+from tests.conftest import make_keys
+
+CFG = UpLIFConfig(batch_bucket=512)
+
+
+def test_bulk_and_lookup():
+    keys = make_keys(20000, 21)
+    idx = UpLIF(keys, keys * 3, CFG)
+    f, v = idx.lookup(keys)
+    assert f.all() and np.array_equal(v, keys * 3)
+    absent = np.setdiff1d(
+        np.random.default_rng(2).integers(0, 1 << 48, 5000), keys
+    )
+    f, _ = idx.lookup(absent)
+    assert not f.any()
+
+
+def test_insert_update_delete_cycle():
+    keys = make_keys(20000, 23)
+    idx = UpLIF(keys, keys, CFG)
+    r = np.random.default_rng(24)
+    new = np.setdiff1d(r.integers(0, 1 << 48, 8000).astype(np.int64), keys)
+    r.shuffle(new)
+    idx.insert(new, new + 7)
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 7)
+    # upsert existing
+    idx.insert(keys[:500], keys[:500] + 9)
+    f, v = idx.lookup(keys[:500])
+    assert f.all() and np.array_equal(v, keys[:500] + 9)
+    # delete mix of in-place and buffered keys
+    dels = np.concatenate([keys[1000:1300], new[:300]])
+    hit = idx.delete(dels)
+    assert hit.all()
+    f, _ = idx.lookup(dels)
+    assert not f.any()
+    # revive
+    idx.insert(dels[:50], dels[:50] + 1)
+    f, v = idx.lookup(dels[:50])
+    assert f.all() and np.array_equal(v, dels[:50] + 1)
+    assert idx.size == len(keys) + len(new) - len(dels) + 50
+
+
+def test_slots_invariants_after_churn():
+    keys = make_keys(8000, 29)
+    idx = UpLIF(keys, keys, CFG)
+    r = np.random.default_rng(30)
+    new = np.setdiff1d(r.integers(0, 1 << 48, 4000).astype(np.int64), keys)
+    r.shuffle(new)
+    idx.insert(new, new)
+    sk = np.asarray(idx.slots.keys)
+    so = np.asarray(idx.slots.occ)
+    assert np.all(np.diff(sk) >= 0), "slot keys must stay sorted"
+    # fill-forward: every empty slot holds the key of the next occupied slot
+    nxt_key = None
+    for i in range(len(sk) - 1, -1, -1):
+        if so[i]:
+            nxt_key = sk[i]
+        elif nxt_key is not None:
+            assert sk[i] == nxt_key or sk[i] == np.iinfo(np.int64).max
+
+
+def test_retrains_preserve_content():
+    keys = make_keys(10000, 31)
+    idx = UpLIF(keys, keys + 1, CFG)
+    r = np.random.default_rng(32)
+    new = np.setdiff1d(r.integers(0, 1 << 48, 6000).astype(np.int64), keys)
+    r.shuffle(new)
+    idx.insert(new, new + 1)
+    idx.delete(keys[:777])
+    idx.retrain_subset()
+    idx.retrain_full()
+    assert idx.bmat.size == 0
+    live = np.concatenate([keys[777:], new])
+    f, v = idx.lookup(live)
+    assert f.all() and np.array_equal(v, live + 1)
+    f, _ = idx.lookup(keys[:777])
+    assert not f.any()
+
+
+def test_range_query_matches_oracle():
+    keys = make_keys(15000, 33)
+    idx = UpLIF(keys, keys * 2, CFG)
+    r = np.random.default_rng(34)
+    new = np.setdiff1d(r.integers(0, 1 << 48, 5000).astype(np.int64), keys)
+    r.shuffle(new)
+    idx.insert(new, new * 2)
+    allk = np.sort(np.concatenate([keys, new]))
+    for _ in range(4):
+        lo = int(r.integers(0, 1 << 48))
+        hi = lo + int(r.integers(1 << 38, 1 << 44))
+        got_k, got_v = idx.range_query(lo, hi, max_out=2048)
+        want = allk[(allk >= lo) & (allk <= hi)][:2048]
+        assert np.array_equal(got_k, want)
+        assert np.array_equal(got_v, want * 2)
+
+
+def test_adjusted_predict_is_exact_rank():
+    keys = make_keys(10000, 35)
+    idx = UpLIF(keys, keys, CFG)
+    r = np.random.default_rng(36)
+    new = np.setdiff1d(r.integers(0, 1 << 48, 3000).astype(np.int64), keys)
+    r.shuffle(new)
+    idx.insert(new, new)
+    allk = np.sort(np.concatenate([keys, new]))
+    q = r.choice(allk, 500)
+    pred = idx.adjusted_predict(q)
+    assert np.array_equal(pred, np.searchsorted(allk, q, "left"))
+
+
+@settings(
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(seed=st.integers(0, 10**6), n_ops=st.integers(1, 6))
+def test_op_sequence_vs_oracle(seed, n_ops):
+    r = np.random.default_rng(seed)
+    keys = np.unique(r.integers(0, 1 << 40, 800).astype(np.int64))
+    idx = UpLIF(keys, keys, UpLIFConfig(batch_bucket=256))
+    oracle = {int(k): int(k) for k in keys}
+    for _ in range(n_ops):
+        op = r.integers(0, 3)
+        if op == 0:  # insert / upsert
+            ks = r.integers(0, 1 << 40, r.integers(1, 300)).astype(np.int64)
+            vs = r.integers(0, 1 << 40, len(ks)).astype(np.int64)
+            # batch semantics: last write wins
+            idx.insert(ks, vs)
+            seen = {}
+            for k, v in zip(ks.tolist(), vs.tolist()):
+                seen[k] = v
+            oracle.update(seen)
+        elif op == 1:  # delete
+            pool = np.asarray(sorted(oracle), dtype=np.int64)
+            take = r.choice(pool, min(len(pool), int(r.integers(1, 100))),
+                            replace=False)
+            idx.delete(take)
+            for k in take.tolist():
+                oracle.pop(int(k), None)
+        else:  # lookup a mix
+            pool = np.asarray(sorted(oracle), dtype=np.int64)
+            hits = r.choice(pool, min(len(pool), 50), replace=False)
+            miss = np.setdiff1d(
+                r.integers(0, 1 << 40, 50).astype(np.int64), pool
+            )
+            f, v = idx.lookup(hits)
+            assert f.all()
+            assert np.array_equal(
+                v, np.asarray([oracle[int(k)] for k in hits])
+            )
+            f, _ = idx.lookup(miss)
+            assert not f.any()
+    # final sweep
+    pool = np.asarray(sorted(oracle), dtype=np.int64)
+    f, v = idx.lookup(pool)
+    assert f.all()
+    assert np.array_equal(v, np.asarray([oracle[int(k)] for k in pool]))
+    assert idx.size == len(oracle)
