@@ -1,9 +1,12 @@
-"""Paper Fig. 6c: UpLIF throughput vs initialization scale x workloads."""
+"""Paper Fig. 6c: UpLIF throughput vs initialization scale x workloads,
+extended with the keyspace-sharded router (ROADMAP scaling layer)."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core import UpLIF
+from repro.core import ShardedUpLIF, UpLIF
 from repro.data import WORKLOADS, WorkloadRunner, make_dataset
+
+SHARD_VARIANTS = ((None, ""), (2, "/S=2"), (4, "/S=4"))
 
 
 def run(scales=(100_000, 400_000, 1_000_000), seconds: float = 2.0,
@@ -12,19 +15,27 @@ def run(scales=(100_000, 400_000, 1_000_000), seconds: float = 2.0,
     for n in scales:
         keys = make_dataset("wikits", n, seed)
         for wname, wrate in WORKLOADS.items():
-            runner = WorkloadRunner(keys, init_frac=0.8, seed=seed)
-            idx = UpLIF(runner.init_keys, runner.init_keys + 1)
-            res = runner.run(idx, wrate, seconds=seconds)
-            rows.append(
-                {
-                    "name": f"n={n}/{wname}",
-                    "us_per_call": round(1e6 * res.seconds / res.ops, 3),
-                    "derived": f"{res.mops:.4f} Mops/s",
-                    "mops": res.mops,
-                    "scale": n,
-                    "workload": wname,
-                }
-            )
+            for n_shards, suffix in SHARD_VARIANTS:
+                runner = WorkloadRunner(keys, init_frac=0.8, seed=seed)
+                if n_shards is None:
+                    idx = UpLIF(runner.init_keys, runner.init_keys + 1)
+                else:
+                    idx = ShardedUpLIF(
+                        runner.init_keys, runner.init_keys + 1,
+                        n_shards=n_shards,
+                    )
+                res = runner.run(idx, wrate, seconds=seconds)
+                rows.append(
+                    {
+                        "name": f"n={n}/{wname}{suffix}",
+                        "us_per_call": round(1e6 * res.seconds / res.ops, 3),
+                        "derived": f"{res.mops:.4f} Mops/s",
+                        "mops": res.mops,
+                        "scale": n,
+                        "workload": wname,
+                        "n_shards": n_shards or 1,
+                    }
+                )
     emit(rows, "fig6c_scalability")
     return rows
 

@@ -8,12 +8,91 @@ stays robust under distribution shift (Section 5.3).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from benchmarks.common import emit, index_classes
+from repro.core import ShardedUpLIF, UpLIF
+from repro.core.uplif import UpLIFConfig
 from repro.data import WORKLOADS, WorkloadRunner, make_dataset
 
 DATASETS = ("wikits", "logn", "fb")
+
+
+def run_sharded(
+    n_keys: int = 400_000, batch: int = 8192, n_iters: int = 15, seed: int = 0
+):
+    """Router vs single shard: batched lookup + insert throughput.
+
+    This is the scaling-layer measurement the refactor exists for: the
+    sharded rows run the SAME flat jitted programs as the single shard
+    (fops §stacked adds only shard-offset index arithmetic), so S shards
+    cost one dispatch. Variants are measured in interleaved rounds and
+    reported as medians so host noise cannot bias the comparison; the
+    delta buffer is presized for the whole insert stream so timed batches
+    never hit a capacity-growth recompile."""
+    rng = np.random.default_rng(seed)
+    keys = make_dataset("wikits", n_keys, seed)
+    init = keys[::2]
+    fresh = np.setdiff1d(keys, init)
+    rng.shuffle(fresh)
+    cfg = UpLIFConfig(bmat_capacity=n_keys)
+    variants = (("UpLIF", 1), ("ShardedUpLIF-2", 2), ("ShardedUpLIF-4", 4))
+    indexes = {
+        name: (
+            UpLIF(init, init + 1, cfg)
+            if s == 1
+            else ShardedUpLIF(init, init + 1, cfg, n_shards=s)
+        )
+        for name, s in variants
+    }
+
+    # -- batched lookup (interleaved rounds, median) -------------------------
+    qs = rng.choice(init, batch).astype(np.int64)
+    for idx in indexes.values():  # compile outside the timed rounds
+        idx.lookup(qs)
+    look = {name: [] for name, _ in variants}
+    for _ in range(n_iters):
+        for name, _ in variants:
+            t0 = time.perf_counter()
+            indexes[name].lookup(qs)
+            look[name].append(time.perf_counter() - t0)
+
+    # -- batched insert (distinct fresh batches, interleaved) ----------------
+    chunks = [
+        fresh[i : i + batch] for i in range(0, len(fresh) - batch, batch)
+    ]
+    warm, timed = chunks[:2], chunks[2 : 2 + max(n_iters // 2, 6)]
+    for idx in indexes.values():
+        for c in warm:
+            idx.insert(c, c + 1)
+    ins = {name: [] for name, _ in variants}
+    for c in timed:
+        for name, _ in variants:
+            t0 = time.perf_counter()
+            indexes[name].insert(c, c + 1)
+            ins[name].append(time.perf_counter() - t0)
+
+    rows = []
+    for op, samples in (("lookup", look), ("insert", ins)):
+        for name, n_shards in variants:
+            ts = sorted(samples[name])
+            dt = ts[len(ts) // 2]
+            rows.append(
+                {
+                    "name": f"{op}/{name}",
+                    "us_per_call": round(1e6 * dt, 3),
+                    "derived": f"{batch / dt / 1e6:.4f} Mops/s",
+                    "mops": batch / dt / 1e6,
+                    "op": op,
+                    "index": name,
+                    "n_shards": n_shards,
+                    "batch": batch,
+                }
+            )
+    emit(rows, "sharded_router")
+    return rows
 
 
 def run(n_keys: int = 400_000, seconds: float = 3.0, seed: int = 0):
@@ -60,6 +139,7 @@ def run(n_keys: int = 400_000, seconds: float = 3.0, seed: int = 0):
                 }
             )
     emit(rows, "table2_throughput")
+    rows.extend(run_sharded(n_keys=n_keys, seed=seed))
     return rows
 
 

@@ -23,42 +23,21 @@ workloads.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gmm import init_gmm_uniform
-from repro.core.types import KEY_MAX
+from repro.core.state import LOCATE_BINSEARCH
 from repro.core.uplif import UpLIF, UpLIFConfig
 
 
-def _build_binsearch_locate(window: int):
-    """Model-free locate: full binary search over the slot array (the
-    B+Tree traversal analogue — log2(capacity) dependent probes)."""
-
-    @jax.jit
-    def locate(slot_keys, _model, queries):
-        cap = slot_keys.shape[0]
-        n_iters = int(np.ceil(np.log2(cap + 1)))
-
-        def body(_, carry):
-            lo, hi = carry  # converge to first index with key > q
-            mid = (lo + hi) >> 1
-            go = slot_keys[jnp.minimum(mid, cap - 1)] <= queries
-            return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
-
-        lo = jnp.zeros(queries.shape, dtype=jnp.int64)
-        hi = jnp.full(queries.shape, cap, dtype=jnp.int64)
-        lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
-        j = lo - 1  # last slot with key <= q
-        start = jnp.clip(j - window // 2, 0, max(cap - window, 0))
-        return j, start
-
-    return locate
-
-
 class BTreeLike(UpLIF):
-    """STX-B+Tree stand-in: no learned model, uniform node slack."""
+    """STX-B+Tree stand-in: no learned model, uniform node slack.
+
+    The model-free traversal (full binary search over the slot array,
+    log2(capacity) dependent probes) is selected through the functional
+    core's static locate strategy — see repro/core/fops.py."""
+
+    LOCATE = LOCATE_BINSEARCH
 
     def __init__(self, keys, vals=None, config: UpLIFConfig = UpLIFConfig()):
         gmm = init_gmm_uniform(
@@ -67,9 +46,6 @@ class BTreeLike(UpLIF):
             config.gmm_components,
         )
         super().__init__(keys, vals, config, gmm=gmm)
-
-    def _make_locate(self):
-        return _build_binsearch_locate(self.cfg.window)
 
     def refreshed_gmm(self):
         # a B+Tree does not model the update distribution

@@ -14,8 +14,15 @@ from repro.core.types import (  # noqa: E402,F401
     KEY_MAX,
     TOMBSTONE,
 )
+from repro.core.state import (  # noqa: E402,F401
+    Counters,
+    UpLIFState,
+    UpLIFStatic,
+)
 from repro.core.radix_spline import build_radix_spline, rs_predict  # noqa: E402,F401
 from repro.core.gmm import fit_gmm, gmm_cdf, gmm_pdf  # noqa: E402,F401
 from repro.core.nullifier import nullify  # noqa: E402,F401
 from repro.core.bmat import BMAT  # noqa: E402,F401
+from repro.core import fops  # noqa: E402,F401
 from repro.core.uplif import UpLIF  # noqa: E402,F401
+from repro.core.sharded import ShardedUpLIF  # noqa: E402,F401

@@ -41,6 +41,17 @@ def _ceil_pow2(n: int) -> int:
     return 1 << max(int(n - 1).bit_length(), 0)
 
 
+def bmat_height(size: int, tree_type: str, fanout: int) -> int:
+    """Dependent-gather count of one rank query (performance measure S1).
+    Shared by the BMAT wrapper and the shard router's aggregate measures."""
+    n = max(size, 2)
+    if tree_type == RBMAT:
+        return int(np.ceil(np.log2(n)))
+    return int(np.ceil(np.log2(max(n // fanout, 2)))) + int(
+        np.ceil(np.log2(fanout))
+    )
+
+
 def _make_fences(keys: jnp.ndarray, fanout: int) -> jnp.ndarray:
     f = keys[::fanout]
     return jnp.concatenate([f, jnp.asarray([KEY_MAX], dtype=keys.dtype)])
@@ -131,45 +142,40 @@ def _merge(
     new_keys: jnp.ndarray,
     new_vals: jnp.ndarray,
     n_new: jnp.ndarray,
-    out_cap: int | None = None,
 ):
     """Merge a sorted-unique batch (padded with KEY_MAX) into the packed
     arrays. Duplicate keys must have been routed to value-updates upstream.
-    Returns (keys, vals, size) with the same capacity."""
+    Returns (keys, vals, size) with the same capacity.
+
+    Gather formulation (XLA CPU scatters are serial, so the classic
+    two-scatter merge is the hot spot): only the q batch positions are
+    scattered — into a marker and a row map — then every output slot pulls
+    its element with a cumsum + two gathers.
+    """
     cap = keys.shape[0]
     q = new_keys.shape[0]
-    # positions of old entries in the merged order
-    old_pos = jnp.arange(cap, dtype=jnp.int64) + jnp.searchsorted(
-        new_keys, keys, side="left"
-    )
+    # merged position of each new entry (strictly increasing for valid rows)
     new_pos = jnp.arange(q, dtype=jnp.int64) + jnp.searchsorted(
         keys, new_keys, side="right"
     )
-    out_keys = jnp.full((cap,), KEY_MAX, dtype=keys.dtype)
-    out_vals = jnp.zeros((cap,), dtype=vals.dtype)
-    old_pos = jnp.where(jnp.arange(cap) < size, old_pos, cap - 1)
-    # padding rows scatter KEY_MAX/0 onto the tail — harmless by construction
-    out_keys = out_keys.at[jnp.minimum(old_pos, cap - 1)].set(
-        jnp.where(jnp.arange(cap) < size, keys, KEY_MAX)
-    )
-    out_vals = out_vals.at[jnp.minimum(old_pos, cap - 1)].set(
-        jnp.where(jnp.arange(cap) < size, vals, 0)
-    )
     valid_new = jnp.arange(q) < n_new
-    tgt = jnp.where(valid_new, new_pos, cap - 1)
-    out_keys = out_keys.at[jnp.minimum(tgt, cap - 1)].set(
-        jnp.where(valid_new, new_keys, KEY_MAX), mode="drop"
+    tgt = jnp.where(valid_new, new_pos, cap)  # OOB -> dropped
+    mark = jnp.zeros((cap,), dtype=jnp.int32).at[tgt].set(1, mode="drop")
+    new_at = jnp.full((cap,), -1, dtype=jnp.int32).at[tgt].set(
+        jnp.arange(q, dtype=jnp.int32), mode="drop"
     )
-    out_vals = out_vals.at[jnp.minimum(tgt, cap - 1)].set(
-        jnp.where(valid_new, new_vals, 0), mode="drop"
+    nb = jnp.cumsum(mark)  # new entries at merged positions <= i (inclusive)
+    i = jnp.arange(cap, dtype=jnp.int64)
+    is_new = new_at >= 0
+    old_idx = jnp.clip(i - nb, 0, cap - 1)
+    from_old = ~is_new & ((i - nb) < size)
+    nk = new_keys[jnp.clip(new_at, 0, q - 1)]
+    nv = new_vals[jnp.clip(new_at, 0, q - 1)]
+    out_keys = jnp.where(
+        is_new, nk, jnp.where(from_old, keys[old_idx], KEY_MAX)
     )
-    # the tail sentinel slot may have been clobbered by padding scatters;
-    # restore invariants for slots >= new size
-    new_size = size + n_new.astype(size.dtype)
-    tail = jnp.arange(cap) >= new_size
-    out_keys = jnp.where(tail, KEY_MAX, out_keys)
-    out_vals = jnp.where(tail, 0, out_vals)
-    return out_keys, out_vals, new_size
+    out_vals = jnp.where(is_new, nv, jnp.where(from_old, vals[old_idx], 0))
+    return out_keys, out_vals, size + n_new.astype(size.dtype)
 
 
 class BMAT:
@@ -213,12 +219,7 @@ class BMAT:
     @property
     def height(self) -> int:
         """Dependent-gather count of one rank query (performance measure S1)."""
-        n = max(self.size, 2)
-        if self.tree_type == RBMAT:
-            return int(np.ceil(np.log2(n)))
-        return int(np.ceil(np.log2(max(n // self.fanout, 2)))) + int(
-            np.ceil(np.log2(self.fanout))
-        )
+        return bmat_height(self.size, self.tree_type, self.fanout)
 
     def memory_bytes(self, modeled: bool = False) -> int:
         """Live bytes; ``modeled=True`` adds the paper's CPU-side overheads

@@ -62,11 +62,14 @@ def nullify(
     alpha_target: float = 1.0,
     d_max: int = 64,
     tail_slack: int = 8,
+    align: int = 1,
 ) -> NullifyResult:
     """Produce the D_update-expanded slot array (Definition 4).
 
     Empty slots carry the fill-forward key (next occupied key to the right;
     KEY_MAX in the tail) so the whole array is sorted and binary-searchable.
+    ``align`` rounds the capacity up to a multiple (the functional insert
+    path requires window-aligned capacity for its grid-segment windows).
     """
     keys = np.asarray(keys, dtype=np.int64)
     vals = np.asarray(vals, dtype=np.int64)
@@ -74,6 +77,8 @@ def nullify(
     g = gap_sizes(keys, gmm, alpha_target=alpha_target, d_max=d_max)
     positions = (np.cumsum(g) + np.arange(n)).astype(np.int64)
     capacity = int(positions[-1]) + 1 + tail_slack if n else tail_slack
+    if align > 1:
+        capacity = ((capacity + align - 1) // align) * align
 
     slot_keys = np.full(capacity, KEY_MAX, dtype=np.int64)
     slot_vals = np.zeros(capacity, dtype=np.int64)

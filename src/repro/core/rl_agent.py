@@ -82,10 +82,7 @@ class QLearningAgent:
             return int(self.rng.choice(self.available_actions))
         if s not in self.q and not explore:
             return A_KEEP  # unseen state at exploit time: cheapest action
-        row = self._q_row(s)
-        masked = np.full_like(row, -np.inf)
-        masked[list(self.available_actions)] = row[list(self.available_actions)]
-        return int(np.argmax(masked))
+        return int(np.argmax(self._masked(self._q_row(s))))
 
     def reward(self, throughput: float, memory: float) -> float:
         """R(s,a) = η·tput/max_tput − (1−η)·mem/total_mem (Section 4.3)."""
@@ -162,10 +159,17 @@ class QLearningAgent:
     ) -> List[Dict]:
         return [self.step(index, run_ops, explore=True) for _ in range(episodes)]
 
+    def _masked(self, row: np.ndarray) -> np.ndarray:
+        masked = np.full_like(row, -np.inf)
+        masked[list(self.available_actions)] = row[list(self.available_actions)]
+        return masked
+
     def policy(self) -> Dict[Tuple, int]:
         """Greedy policy from the learned Q-table (evaluation mode: the paper
-        'only exploits the calculated Q-Table')."""
-        return {s: int(np.argmax(row)) for s, row in self.q.items()}
+        'only exploits the calculated Q-Table'). Masks disabled actions the
+        same way ``choose`` does — the admin's action restrictions must hold
+        at exploit time too, not just during training."""
+        return {s: int(np.argmax(self._masked(row))) for s, row in self.q.items()}
 
     def save(self, path: str):
         np.savez(

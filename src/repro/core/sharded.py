@@ -1,0 +1,448 @@
+"""ShardedUpLIF — boundary-partitioned keyspace router (DESIGN.md §5).
+
+The first concrete scaling layer of the ROADMAP's router → shards → kernels
+architecture. Keys are range-partitioned into S shards at build-time
+quantile boundaries, and — because a shard's entire index is a pure
+``UpLIFState`` pytree — the router stores all S shards *stacked*: every
+leaf carries a leading shard axis. One batched operation is then
+
+  1. padded once on the host (exactly what the single-shard shell does),
+  2. executed as ONE jitted program: the flat stacked variants of the
+     pure functional ops (repro/core/fops.py §stacked) route each query
+     on-device from the S-1 boundaries and run all shards via
+     shard-offset index arithmetic over the [S*cap] view, so S shards
+     cost a single dispatch with the same op count as one shard,
+  3. returned in batch order (no re-scatter needed).
+
+Host-side tuning actions (retrains) temporarily unstack a shard into a
+regular ``UpLIF`` shell, run the existing host machinery, and restack with
+re-padded common shapes. Shapes are padded to the max across shards (slot
+capacity, spline knots, BMAT capacity), which is what makes the leaf-wise
+stacking legal; padding obeys the fill-forward invariants so the padded
+tails are inert.
+
+The public API mirrors ``UpLIF`` (lookup / insert / delete / range_query /
+range_query_batch / size / memory accounting / tuning hooks), so the
+serving engine and the benchmark harness can swap the router in directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fops
+from repro.core.bmat import BMAT, BPMAT, RBMAT, _make_fences, bmat_height
+from repro.core.state import UpLIFState, UpLIFStatic
+from repro.core.types import BMATState, GMMState, KEY_MAX, SlotsState
+from repro.core.uplif import UpLIF, UpLIFConfig, bucket_width
+
+
+# --------------------------------------------------------------------------
+# One jitted program drives all shards. Point ops (lookup/insert/delete/
+# rank) use the *flat stacked* fops variants — shard-offset index
+# arithmetic over the [S*cap] view, so the op count and per-op batch sizes
+# match the single-shard program exactly (fops.py §stacked). Range scans
+# unroll per shard inside one program (their cost is slice-dominated).
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("static", "max_out"))
+def _vrange(state, lo, hi, *, static, max_out):
+    S = jax.tree_util.tree_leaves(state)[0].shape[0]
+    outs = [
+        fops.range_scan(
+            jax.tree_util.tree_map(lambda x: x[s], state),
+            lo[s], hi[s], static=static, max_out=max_out,
+        )
+        for s in range(S)
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+
+@functools.partial(jax.jit, static_argnames=("fanout", "pad"))
+def _vgrow_bmat(keys, vals, *, fanout, pad):
+    """Grow every shard's BMAT by ``pad`` KEY_MAX slots (stacked axis 1)."""
+    keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=KEY_MAX)
+    vals = jnp.pad(vals, ((0, 0), (0, pad)))
+    fences = jax.vmap(lambda k: _make_fences(k, fanout))(keys)
+    return keys, vals, fences
+
+
+@dataclasses.dataclass
+class _ShardMeta:
+    """Host-side per-shard metadata that cannot live in the stacked pytree."""
+
+    rs_static: object
+    gmm: GMMState
+    alpha: float
+    reservoir: np.ndarray
+
+
+class ShardedUpLIF:
+    """Keyspace router over S UpLIF shards stored as one stacked pytree."""
+
+    def __init__(
+        self,
+        keys: np.ndarray,
+        vals: Optional[np.ndarray] = None,
+        config: UpLIFConfig = UpLIFConfig(),
+        n_shards: int = 4,
+        gmm: Optional[GMMState] = None,
+    ):
+        keys = np.asarray(keys, dtype=np.int64)
+        order = np.argsort(keys)
+        keys = keys[order]
+        if vals is None:
+            vals = keys.copy()
+        else:
+            vals = np.asarray(vals, dtype=np.int64)[order]
+        uk, ui = np.unique(keys, return_index=True)
+        keys, vals = uk, vals[ui]
+        assert len(keys) > 0, "sharded router needs a non-empty bootstrap"
+
+        self.n_shards = max(1, min(int(n_shards), len(keys)))
+        # the delta-buffer budget is per index, not per shard
+        self.cfg = dataclasses.replace(
+            config,
+            bmat_capacity=max(256, config.bmat_capacity // self.n_shards),
+        )
+        # equal-count split points; boundaries[i] = first key of shard i+1
+        cuts = [
+            round(i * len(keys) / self.n_shards)
+            for i in range(1, self.n_shards)
+        ]
+        self.boundaries = (
+            keys[np.asarray(cuts, dtype=np.int64)]
+            if cuts
+            else np.zeros(0, dtype=np.int64)
+        )
+        self._jbounds = jnp.asarray(self.boundaries)
+        bounds = [0] + [int(c) for c in cuts] + [len(keys)]
+        shells = [
+            UpLIF(keys[a:b], vals[a:b], self.cfg, gmm=gmm)
+            for a, b in zip(bounds[:-1], bounds[1:])
+        ]
+        self.bmat_kind = self.cfg.bmat_type
+        self.n_lookups = 0
+        self.n_retrains = 0
+        self._rng = np.random.default_rng(0)
+        self._restack(shells)
+
+    # -- stacking ------------------------------------------------------------
+    def _restack(self, shells: List[UpLIF]):
+        """Pad every shard's state to common shapes and stack leaf-wise."""
+        W = self.cfg.window
+        cap = max(sh.capacity for sh in shells)  # W-aligned per shard
+        bcap = max(sh.bmat.capacity for sh in shells)
+        n_knots = max(int(sh.rs_model.spline_keys.shape[0]) for sh in shells)
+        padded = []
+        for sh in shells:
+            st = sh.fstate
+            d = cap - st.slots.keys.shape[0]
+            slots = SlotsState(
+                keys=jnp.pad(st.slots.keys, (0, d), constant_values=KEY_MAX),
+                vals=jnp.pad(st.slots.vals, (0, d)),
+                occ=jnp.pad(st.slots.occ, (0, d)),
+            )
+            k = n_knots - st.model.spline_keys.shape[0]
+            model = st.model._replace(
+                # repeat the last knot: interpolation degenerates to the
+                # knot value, which is exactly the clamped extrapolation
+                spline_keys=jnp.pad(st.model.spline_keys, (0, k), mode="edge"),
+                spline_pos=jnp.pad(st.model.spline_pos, (0, k), mode="edge"),
+            )
+            bd = bcap - st.bmat.keys.shape[0]
+            bkeys = jnp.pad(st.bmat.keys, (0, bd), constant_values=KEY_MAX)
+            bmat = BMATState(
+                keys=bkeys,
+                vals=jnp.pad(st.bmat.vals, (0, bd)),
+                fences=_make_fences(bkeys, self.cfg.bmat_fanout),
+                size=st.bmat.size,
+            )
+            padded.append(
+                UpLIFState(slots=slots, model=model, bmat=bmat,
+                           counters=st.counters)
+            )
+        self.state: UpLIFState = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *padded
+        )
+        self.rs_iters = max(sh.rs_static.n_search_iters for sh in shells)
+        self._meta = [
+            _ShardMeta(
+                rs_static=sh.rs_static,
+                gmm=sh.gmm,
+                alpha=sh.alpha,
+                reservoir=sh._reservoir,
+            )
+            for sh in shells
+        ]
+        assert cap % W == 0
+
+    def _unstack_shell(self, s: int) -> UpLIF:
+        """Materialize shard ``s`` as a regular UpLIF shell (shared arrays)."""
+        st: UpLIFState = jax.tree_util.tree_map(lambda x: x[s], self.state)
+        sh = object.__new__(UpLIF)
+        sh.cfg = self.cfg
+        sh.slots = st.slots
+        sh.rs_model = st.model
+        sh.rs_static = self._meta[s].rs_static
+        sh.gmm = self._meta[s].gmm
+        sh.alpha = self._meta[s].alpha
+        sh.bmat = BMAT(self.bmat_kind, self.cfg.bmat_fanout)
+        sh.bmat.state = st.bmat
+        sh._counters = st.counters
+        sh._reservoir = self._meta[s].reservoir
+        sh._rng = np.random.default_rng(s)
+        sh.n_lookups = 0
+        sh.n_retrains = 0
+        return sh
+
+    def _static(self) -> UpLIFStatic:
+        return UpLIFStatic(
+            window=self.cfg.window,
+            movement_k=self.cfg.movement_k,
+            rs_iters=self.rs_iters,
+            insert_rounds=self.cfg.insert_rounds,
+            fanout=self.cfg.bmat_fanout,
+            bmat_kind=self.bmat_kind,
+            locate=UpLIF.LOCATE,
+        )
+
+    # -- routing ---------------------------------------------------------------
+    def _route(self, keys: np.ndarray) -> np.ndarray:
+        """Shard id per key: shard s owns [boundaries[s-1], boundaries[s])."""
+        return np.searchsorted(self.boundaries, keys, side="right")
+
+    def _bucket(self, n: int) -> int:
+        return bucket_width(n, self.cfg.batch_bucket)
+
+    def _observe_updates(self, keys: np.ndarray):
+        """Feed each shard's D_update reservoir (Phase 2) so router retrains
+        refresh the GMM exactly like single-shard UpLIF does."""
+        cap = self.cfg.reservoir
+        take = (
+            keys
+            if len(keys) <= cap
+            else self._rng.choice(keys, cap, replace=False)
+        )
+        sid = self._route(take)
+        for s in range(self.n_shards):
+            sub = take[sid == s]
+            if len(sub) == 0:
+                continue
+            m = self._meta[s]
+            res = np.concatenate([m.reservoir, sub])
+            if len(res) > cap:
+                res = self._rng.choice(res, cap, replace=False)
+            m.reservoir = res
+
+    def _pad_route(self, keys: np.ndarray, *aux):
+        """Pad the batch to a bucketed width — ONE batch for all shards;
+        the stacked ops route per query on-device from the boundaries, so
+        the host does exactly what the single-shard shell does."""
+        n = len(keys)
+        B = self._bucket(max(n, 1))
+        q = np.full(B, KEY_MAX, dtype=np.int64)
+        q[:n] = keys
+        outs = []
+        for a in aux:
+            m = np.zeros(B, dtype=np.int64)
+            m[:n] = a
+            outs.append(jnp.asarray(m))
+        return jnp.asarray(q), n, *outs
+
+    # -- queries ---------------------------------------------------------------
+    def lookup(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        queries = np.asarray(queries, dtype=np.int64)
+        q, n = self._pad_route(queries)
+        f, v = fops.slookup(self.state, q, self._jbounds, static=self._static())
+        self.n_lookups += n
+        return np.asarray(f)[:n], np.asarray(v)[:n]
+
+    def insert(self, keys: np.ndarray, vals: Optional[np.ndarray] = None) -> int:
+        keys = np.asarray(keys, dtype=np.int64)
+        if vals is None:
+            vals = keys.copy()
+        vals = np.asarray(vals, dtype=np.int64)
+        if len(keys) == 0:
+            return 0
+        self._observe_updates(keys)
+        q, n, vm = self._pad_route(keys, vals)
+        self._ensure_bmat_capacity(int(q.shape[0]))
+        state, res = fops.sinsert(
+            self.state, q, vm, self._jbounds, static=self._static()
+        )
+        self.state = state
+        return int(res.n_overflow)
+
+    def delete(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys, dtype=np.int64)
+        q, n = self._pad_route(keys)
+        state, hit = fops.sdelete(self.state, q, self._jbounds, static=self._static())
+        self.state = state
+        return np.asarray(hit)[:n]
+
+    def range_query(self, lo: int, hi: int, max_out: int = 1024):
+        ks, vs = self.range_query_batch(
+            np.asarray([lo], dtype=np.int64),
+            np.asarray([hi], dtype=np.int64),
+            max_out,
+        )
+        return ks[0], vs[0]
+
+    def range_query_batch(
+        self, lo: np.ndarray, hi: np.ndarray, max_out: int = 1024
+    ):
+        """A range may span several shards: every shard answers the queries
+        intersecting its key interval — still ONE vmapped device program —
+        and the per-shard slices concatenate in shard order, which IS key
+        order because the partition is a range partition."""
+        lo = np.asarray(lo, dtype=np.int64)
+        hi = np.asarray(hi, dtype=np.int64)
+        n = len(lo)
+        edges = np.concatenate([[0], self.boundaries, [KEY_MAX]])
+        picks = [
+            np.nonzero((hi >= edges[s]) & (lo < edges[s + 1]))[0]
+            for s in range(self.n_shards)
+        ]
+        B = self._bucket(max(max((len(p) for p in picks), default=1), 1))
+        lo_m = np.full((self.n_shards, B), KEY_MAX, dtype=np.int64)
+        hi_m = np.zeros((self.n_shards, B), dtype=np.int64)
+        for s, p in enumerate(picks):
+            lo_m[s, : len(p)] = lo[p]
+            hi_m[s, : len(p)] = hi[p]
+        res = _vrange(
+            self.state, jnp.asarray(lo_m), jnp.asarray(hi_m),
+            static=self._static(), max_out=max_out,
+        )
+        ks = np.asarray(res.keys)
+        vs = np.asarray(res.vals)
+        cn = np.asarray(res.count)
+        parts_k: List[List[np.ndarray]] = [[] for _ in range(n)]
+        parts_v: List[List[np.ndarray]] = [[] for _ in range(n)]
+        for s, p in enumerate(picks):
+            for row, qi in enumerate(p):
+                c = cn[s, row]
+                parts_k[qi].append(ks[s, row, :c])
+                parts_v[qi].append(vs[s, row, :c])
+        out_k, out_v = [], []
+        for i in range(n):
+            if parts_k[i]:
+                out_k.append(np.concatenate(parts_k[i])[:max_out])
+                out_v.append(np.concatenate(parts_v[i])[:max_out])
+            else:
+                out_k.append(np.zeros(0, dtype=np.int64))
+                out_v.append(np.zeros(0, dtype=np.int64))
+        return out_k, out_v
+
+    def adjusted_predict(self, queries: np.ndarray) -> np.ndarray:
+        """Global logical rank = shard-local rank + total live keys in the
+        shards left of the owning shard."""
+        queries = np.asarray(queries, dtype=np.int64)
+        # a preceding shard contributes its live in-place keys plus its FULL
+        # BMAT entry count — the bias r(k) counts tombstones too, matching
+        # the single-shard BMAT rank semantics
+        sizes = np.asarray(self.state.counters.n_keys) + np.asarray(
+            self.state.bmat.size, dtype=np.int64
+        )
+        base = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        q, n = self._pad_route(queries)
+        rank = np.asarray(fops.srank(self.state, q, self._jbounds, static=self._static()))
+        return rank[:n] + base[self._route(queries)]
+
+    # -- capacity management ---------------------------------------------------
+    def _ensure_bmat_capacity(self, incoming: int):
+        sizes = np.asarray(self.state.bmat.size)
+        bcap = int(self.state.bmat.keys.shape[1])
+        need = int(sizes.max()) + incoming
+        if need <= bcap - 1:
+            return
+        new_cap = 1 << max(int(2 * need).bit_length(), 0)
+        keys, vals, fences = _vgrow_bmat(
+            self.state.bmat.keys,
+            self.state.bmat.vals,
+            fanout=self.cfg.bmat_fanout,
+            pad=new_cap - bcap,
+        )
+        self.state = self.state._replace(
+            bmat=BMATState(
+                keys=keys, vals=vals, fences=fences, size=self.state.bmat.size
+            )
+        )
+
+    # -- tuning hooks (Section 4.2, applied per shard) -------------------------
+    def retrain_full(self):
+        shells = [self._unstack_shell(s) for s in range(self.n_shards)]
+        for sh in shells:
+            sh.retrain_full()
+        self._restack(shells)
+        self.n_retrains += 1
+
+    def retrain_subset(self, quantiles: int = 16) -> int:
+        # absorb on the shard with the largest delta buffer (cheapest win)
+        sizes = np.asarray(self.state.bmat.size)
+        worst = int(np.argmax(sizes))
+        shells = [self._unstack_shell(s) for s in range(self.n_shards)]
+        absorbed = shells[worst].retrain_subset(quantiles)
+        self._restack(shells)
+        self.n_retrains += 1
+        return absorbed
+
+    def switch_bmat_type(self):
+        self.bmat_kind = BPMAT if self.bmat_kind == RBMAT else RBMAT
+
+    # -- accounting ------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        c = self.state.counters
+        return int(jnp.sum(c.n_keys + c.n_bmat_live))
+
+    @property
+    def n_keys(self) -> int:
+        return int(jnp.sum(self.state.counters.n_keys))
+
+    @property
+    def capacity(self) -> int:
+        return int(np.prod(self.state.slots.keys.shape))
+
+    def memory_bytes(self, modeled: bool = False) -> int:
+        from repro.core.gmm import gmm_memory_bytes
+
+        arrays = (
+            list(self.state.slots) + list(self.state.model)
+            + list(self.state.bmat)
+        )
+        total = sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrays)
+        return total + sum(gmm_memory_bytes(m.gmm) for m in self._meta)
+
+    def index_bytes(self, modeled: bool = False) -> int:
+        from repro.core.gmm import gmm_memory_bytes
+
+        arrays = list(self.state.model) + list(self.state.bmat)
+        total = sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in arrays)
+        return total + sum(gmm_memory_bytes(m.gmm) for m in self._meta)
+
+    def measures(self) -> dict:
+        """Aggregate Section 4.1 measures (worst-case heights, summed sizes)."""
+        c = self.state.counters
+        bsizes = np.asarray(self.state.bmat.size)
+        heights = [
+            bmat_height(int(b), self.bmat_kind, self.cfg.bmat_fanout)
+            for b in bsizes
+        ]
+        return {
+            "bmat_height": max(heights),
+            "granularity": int(np.min(np.asarray(c.min_granularity))),
+            "error_scaling": float(np.mean([m.alpha for m in self._meta])),
+            "n_models": sum(m.rs_static.n_spline for m in self._meta),
+            "bmat_type": self.bmat_kind,
+            "bmat_size": int(bsizes.sum()),
+            "n_keys": self.n_keys,
+            "occupancy": self.n_keys / max(self.capacity, 1),
+            "n_shards": self.n_shards,
+        }

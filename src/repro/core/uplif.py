@@ -13,24 +13,38 @@ Batched, tensorized realization of the paper's four modules:
                                     retrain / subset-retrain / BMAT-type
                                     switches through the hooks on this class.
 
+This class is a *thin stateful shell*: the whole index lives in one
+``UpLIFState`` pytree (repro/core/state.py) and every operation forwards to
+the jitted pure functions in ``repro/core/fops.py`` — lookup, insert,
+delete and range_scan all run end-to-end on device, including the greedy
+window-accept (grid-segment formulation) and the fill-forward repair. The
+shell owns only host concerns: batch padding, BMAT capacity growth, the
+D_update reservoir, and the (host-side, rare) retrain actions.
+
 Every operation takes a *batch* of keys (the TPU-native adaptation; see
 DESIGN.md §2). Correctness is property-tested against a host oracle in
-tests/test_uplif_invariants.py.
+tests/test_uplif_invariants.py and tests/test_fops_sharded.py.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fops
 from repro.core.bmat import BMAT, BPMAT
 from repro.core.gmm import fit_gmm, gmm_memory_bytes, init_gmm_uniform
 from repro.core.nullifier import nullify
-from repro.core.radix_spline import build_radix_spline, rs_memory_bytes, rs_predict
+from repro.core.radix_spline import build_radix_spline, rs_memory_bytes
+from repro.core.state import (
+    LOCATE_SPLINE,
+    Counters,
+    UpLIFState,
+    UpLIFStatic,
+    init_counters,
+)
 from repro.core.types import GMMState, KEY_MAX, TOMBSTONE, SlotsState
 
 
@@ -50,195 +64,28 @@ class UpLIFConfig:
     reservoir: int = 32768       # update-key sample for D_update estimation
     bmat_type: str = BPMAT
     bmat_fanout: int = 16
+    bmat_capacity: int = 4096    # initial delta-buffer capacity (grows)
 
     def __post_init__(self):
         assert self.window & (self.window - 1) == 0
         assert 2 * (self.max_error + self.movement_k) + 4 <= self.window
 
 
-# ---------------------------------------------------------------------------
-# jitted cores (pure functions of arrays + static ints)
-# ---------------------------------------------------------------------------
-
-
-def _build_locate(rs_static_iters: int, window: int):
-    """Model-guided last-mile locate: spline predict + bounded BISECTION
-    inside the error window. ceil(log2(W)) dependent probes — the whole
-    point of the learned model vs the B+Tree baseline's log2(capacity)
-    probes. Returns (j, start): j = index of the last slot with key <= q
-    (start-1 if below the window). Factory closure keeps the rs static
-    metadata a Python int inside the jit."""
-    n_bisect = max(1, int(np.ceil(np.log2(window))))
-
-    @jax.jit
-    def locate(slot_keys, model, queries):
-        from repro.core.radix_spline import _rs_predict_impl
-
-        cap = slot_keys.shape[0]
-        p = _rs_predict_impl(model, queries, rs_static_iters)
-        c = jnp.clip(jnp.round(p).astype(jnp.int64), 0, cap - 1)
-        start = jnp.clip(c - window // 2, 0, max(cap - window, 0))
-        lo = start
-        hi = jnp.minimum(start + window - 1, cap - 1)
-
-        def body(_, carry):
-            lo, hi = carry
-            mid = (lo + hi + 1) >> 1
-            go = slot_keys[mid] <= queries
-            return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
-
-        lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
-        j = jnp.where(slot_keys[start] <= queries, lo, start - 1)
-        return j, start
-
-    return locate
-
-
-@jax.jit
-def _probe(slot_keys, slot_vals, slot_occ, j, queries):
-    cap = slot_keys.shape[0]
-    jj = jnp.clip(j, 0, cap - 1)
-    hit = (j >= 0) & (slot_keys[jj] == queries) & slot_occ[jj] & (queries != KEY_MAX)
-    val = slot_vals[jj]
-    alive = hit & (val != TOMBSTONE)
-    return hit, alive, jnp.where(alive, val, 0), jj
-
-
-def _greedy_accept(starts: np.ndarray, valid: np.ndarray, window: int) -> np.ndarray:
-    """Exact greedy interval scheduling on the host (sorted starts): accept a
-    window iff it begins at/after the end of the last accepted one. A tight
-    scalar recurrence — O(Q) python, ~1ms for 4k windows; the TPU production
-    path would use grid-aligned windows (DESIGN.md §Perf notes)."""
-    accept = np.zeros(len(starts), dtype=bool)
-    last_end = -1
-    sl = starts.tolist()
-    vl = valid.tolist()
-    for i in range(len(sl)):
-        if vl[i] and sl[i] >= last_end:
-            accept[i] = True
-            last_end = sl[i] + window
-    return accept
-
-
-@functools.partial(jax.jit, static_argnames=("window", "movement_k"))
-def _inplace_insert(
-    slot_keys,
-    slot_vals,
-    slot_occ,
-    q_keys,
-    q_vals,
-    starts,
-    accept,
-    valid,
-    window: int,
-    movement_k: int,
-):
-    """One vectorized round of conflict-free in-place window inserts.
-
-    Inputs are sorted by ``starts``; ``accept`` marks the non-overlapping
-    subset (host greedy). Returns updated slot arrays, a success mask, and
-    the min key-span of failed windows (granularity measure S2).
-    """
-    cap = slot_keys.shape[0]
-    W = window
-    K = movement_k
-
-    idx = starts[:, None] + jnp.arange(W, dtype=jnp.int64)[None, :]
-    w_k = slot_keys[idx]
-    w_v = slot_vals[idx]
-    w_o = slot_occ[idx]
-
-    t_idx = jnp.arange(W, dtype=jnp.int64)[None, :]
-    k_col = q_keys[:, None]
-    ip = jnp.sum(w_k < k_col, axis=1, keepdims=True)  # first slot with key >= k
-
-    # nearest empty slot left / right of the insertion point
-    left_cand = jnp.where(~w_o & (t_idx < ip), t_idx, -1)
-    l = jnp.max(left_cand, axis=1, keepdims=True)
-    right_cand = jnp.where(~w_o & (t_idx >= ip), t_idx, 2 * W)
-    r = jnp.min(right_cand, axis=1, keepdims=True)
-
-    margin = 2
-    in_bounds = (ip[:, 0] >= margin) & (ip[:, 0] <= W - margin)
-    # fill-forward safety: the empty run containing the insertion point must
-    # START inside the window (i.e. an occupied slot exists to the left of ip
-    # in-window, or the window begins at slot 0). Otherwise empties left of
-    # the window would keep a stale fill key and break global sortedness.
-    has_left_occ = jnp.any(w_o & (t_idx < ip), axis=1) | (starts == 0)
-    in_bounds = in_bounds & has_left_occ
-    r_ok = (r[:, 0] < W - 1) & (r[:, 0] - ip[:, 0] <= K)
-    l_ok = (l[:, 0] >= 1) & (ip[:, 0] - 1 - l[:, 0] <= K)
-    use_right = r_ok & (~l_ok | (r[:, 0] - ip[:, 0] <= ip[:, 0] - 1 - l[:, 0]))
-    use_left = l_ok & ~use_right
-    can = accept & in_bounds & (use_right | use_left)
-
-    ur = use_right[:, None]
-    # gather-source schedule for the bounded shift
-    src = jnp.where(
-        ur & (t_idx > ip) & (t_idx <= r),
-        t_idx - 1,
-        jnp.where(~ur & (t_idx >= l) & (t_idx < ip - 1), t_idx + 1, t_idx),
-    )
-    src = jnp.clip(src, 0, W - 1)
-    n_k = jnp.take_along_axis(w_k, src, axis=1)
-    n_v = jnp.take_along_axis(w_v, src, axis=1)
-    n_o = jnp.take_along_axis(w_o, src, axis=1)
-
-    place = jnp.where(use_right, ip[:, 0], ip[:, 0] - 1)
-    place_col = place[:, None]
-    n_k = jnp.where(t_idx == place_col, k_col, n_k)
-    n_v = jnp.where(t_idx == place_col, q_vals[:, None], n_v)
-    n_o = jnp.where(t_idx == place_col, True, n_o)
-
-    # keep untouched windows byte-identical
-    n_k = jnp.where(can[:, None], n_k, w_k)
-    n_v = jnp.where(can[:, None], n_v, w_v)
-    n_o = jnp.where(can[:, None], n_o, w_o)
-
-    # ---- fill-forward repair (vectorized suffix-min) ---------------------
-    # For a sorted window, an empty slot's fill key = min occupied key at or
-    # after it; if none in-window, the (unchanged) boundary fill of the last
-    # slot applies. Both collapse to one reverse cummin.
-    m = jnp.where(n_o, n_k, jnp.asarray(KEY_MAX, n_k.dtype))
-    suffix_min = jnp.flip(jax.lax.cummin(jnp.flip(m, axis=1), axis=1), axis=1)
-    boundary = n_k[:, W - 1 :]
-    n_k = jnp.minimum(suffix_min, boundary)
-
-    # ---- scatter back (non-accepted rows dropped via OOB index) ---------
-    row_start = jnp.where(accept, starts, cap + 1)
-    sidx = row_start[:, None] + jnp.arange(W, dtype=jnp.int64)[None, :]
-    slot_keys = slot_keys.at[sidx].set(n_k, mode="drop")
-    slot_vals = slot_vals.at[sidx].set(n_v, mode="drop")
-    slot_occ = slot_occ.at[sidx].set(n_o, mode="drop")
-
-    span = w_k[:, W - 1] - w_k[:, 0]
-    failed_span = jnp.where(
-        accept & ~can & valid, span, jnp.asarray(np.iinfo(np.int64).max)
-    )
-    return slot_keys, slot_vals, slot_occ, can, jnp.min(failed_span)
-
-
-@jax.jit
-def _scatter_vals(slot_vals, idx, vals, mask):
-    cap = slot_vals.shape[0]
-    tgt = jnp.where(mask, idx, cap + 1)
-    return slot_vals.at[tgt].set(vals, mode="drop")
-
-
-@jax.jit
-def _logical_rank(slot_keys, slot_occ, slot_vals, queries):
-    """Exact rank among live in-place keys (O(cap) reduce — API/tests only)."""
-    live = slot_occ & (slot_vals != TOMBSTONE)
-    return jnp.sum(
-        live[None, :] & (slot_keys[None, :] < queries[:, None]), axis=1
-    )
-
-
-# ---------------------------------------------------------------------------
+def bucket_width(n: int, batch_bucket: int) -> int:
+    """Padded batch width: multiples of ``batch_bucket`` above it, else the
+    next power of two (min 256). Shared by the shell and the shard router so
+    their jit caches bucket identically."""
+    if n >= batch_bucket:
+        return ((n + batch_bucket - 1) // batch_bucket) * batch_bucket
+    return max(256, 1 << max(int(n - 1).bit_length(), 0))
 
 
 class UpLIF:
-    """Batched updatable learned index (host orchestration wrapper)."""
+    """Batched updatable learned index (thin shell over repro.core.fops)."""
+
+    # Locate strategy baked into the jitted ops; baselines override
+    # (e.g. the B+Tree baseline uses a pure binary search).
+    LOCATE = LOCATE_SPLINE
 
     def __init__(
         self,
@@ -259,15 +106,16 @@ class UpLIF:
         keys, vals = uk, vals[ui]
         assert np.all(keys >= 0) and (len(keys) == 0 or keys[-1] < KEY_MAX)
 
-        self.bmat = BMAT(config.bmat_type, config.bmat_fanout)
+        self.bmat = BMAT(
+            config.bmat_type, config.bmat_fanout, capacity=config.bmat_capacity
+        )
         self._reservoir = np.zeros(0, dtype=np.int64)
         self._rng = np.random.default_rng(0)
-        # Section 4.1 counters
+        # Section 4.1 counters: usage counters stay on the host; structural
+        # counters live in the device-resident Counters pytree.
         self.n_lookups = 0
-        self.n_inplace = 0
-        self.n_overflow = 0
         self.n_retrains = 0
-        self.min_granularity = np.iinfo(np.int64).max
+        self._counters = init_counters()
 
         if gmm is None:
             lo = float(keys[0]) if len(keys) else 0.0
@@ -286,10 +134,10 @@ class UpLIF:
             alpha_target=cfg.alpha_target,
             d_max=cfg.d_max,
             tail_slack=max(64, cfg.window),
+            align=cfg.window,  # fops grid windows require W-aligned capacity
         )
         self.slots = res.slots
         self.alpha = res.alpha
-        self.n_keys = len(keys)
         model, static = build_radix_spline(
             keys,
             res.positions,
@@ -297,12 +145,63 @@ class UpLIF:
             max_error=cfg.max_error,
         )
         self.rs_model, self.rs_static = model, static
-        self._locate = self._make_locate()
+        c = self._counters
+        self._counters = Counters(
+            n_keys=jnp.asarray(len(keys), dtype=jnp.int64),
+            n_bmat_live=jnp.asarray(self.bmat.live_size, dtype=jnp.int64),
+            n_inplace=c.n_inplace,
+            n_overflow=c.n_overflow,
+            min_granularity=c.min_granularity,
+        )
 
-    def _make_locate(self):
-        """Locate-strategy hook; baselines override (e.g. pure binary search
-        for the B+Tree baseline)."""
-        return _build_locate(self.rs_static.n_search_iters, self.cfg.window)
+    # -- functional-core plumbing ---------------------------------------------
+    @property
+    def fstate(self) -> UpLIFState:
+        """The whole index as a pure pytree (zero-copy view of the arrays)."""
+        return UpLIFState(
+            slots=self.slots,
+            model=self.rs_model,
+            bmat=self.bmat.state,
+            counters=self._counters,
+        )
+
+    def fstatic(self) -> UpLIFStatic:
+        """Hashable static config for the fops suite."""
+        return UpLIFStatic(
+            window=self.cfg.window,
+            movement_k=self.cfg.movement_k,
+            rs_iters=(
+                self.rs_static.n_search_iters
+                if self.LOCATE == LOCATE_SPLINE
+                else 0
+            ),
+            insert_rounds=self.cfg.insert_rounds,
+            fanout=self.bmat.fanout,
+            bmat_kind=self.bmat.tree_type,
+            locate=self.LOCATE,
+        )
+
+    def _adopt(self, state: UpLIFState):
+        self.slots = state.slots
+        self.bmat.state = state.bmat
+        self._counters = state.counters
+
+    # -- counters (host views of the device pytree) ---------------------------
+    @property
+    def n_keys(self) -> int:
+        return int(self._counters.n_keys)
+
+    @property
+    def n_inplace(self) -> int:
+        return int(self._counters.n_inplace)
+
+    @property
+    def n_overflow(self) -> int:
+        return int(self._counters.n_overflow)
+
+    @property
+    def min_granularity(self) -> int:
+        return int(self._counters.min_granularity)
 
     @property
     def capacity(self) -> int:
@@ -311,46 +210,36 @@ class UpLIF:
     @property
     def size(self) -> int:
         """Total live keys (in-place + buffered, tombstones excluded)."""
-        return self.n_keys + self.bmat.live_size
+        c = self._counters
+        return int(c.n_keys + c.n_bmat_live)
 
     # -- helpers ---------------------------------------------------------------
     def _pad(self, arr: np.ndarray, fill) -> Tuple[jnp.ndarray, int]:
-        """Pad to a power-of-two bucket (min 256, aligned to batch_bucket
-        above it) so jit variants stay few while retry rounds on small
-        leftovers avoid full-batch work."""
+        """Pad to a bucketed width (see ``bucket_width``) so jit variants
+        stay few while retry rounds on small leftovers avoid full-batch
+        work."""
         n = len(arr)
-        b = self.cfg.batch_bucket
-        if n >= b:
-            m = ((n + b - 1) // b) * b
-        else:
-            m = max(256, 1 << max(int(n - 1).bit_length(), 0))
+        m = bucket_width(n, self.cfg.batch_bucket)
         if n == m:
             return jnp.asarray(arr), n
         out = np.full(m, fill, dtype=arr.dtype)
         out[:n] = arr
         return jnp.asarray(out), n
 
-    def _locate_batch(self, q: jnp.ndarray):
-        return self._locate(self.slots.keys, self.rs_model, q)
+    def _ensure_bmat_capacity(self, incoming: int):
+        """Pure-fn merges cannot grow arrays: presize for the worst case
+        (every incoming key overflows) before entering the jitted insert."""
+        if self.bmat.size + incoming > self.bmat.capacity - 1:
+            self.bmat._grow(self.bmat.size + incoming)
 
     # -- queries ---------------------------------------------------------------
     def lookup(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Batched point lookup → (found bool[n], values int64[n])."""
         queries = np.asarray(queries, dtype=np.int64)
         q, n = self._pad(queries, KEY_MAX)
-        j, _ = self._locate_batch(q)
-        _, alive, vals, _ = _probe(
-            self.slots.keys, self.slots.vals, self.slots.occ, j, q
-        )
-        alive = np.asarray(alive)[:n]
-        vals = np.asarray(vals)[:n]
-        if self.bmat.size > 0 and not alive.all():
-            bf, bv = self.bmat.lookup(queries)
-            bf = np.asarray(bf) & ~alive
-            vals = np.where(bf, np.asarray(bv), vals)
-            alive = alive | bf
+        alive, vals = fops.lookup(self.fstate, q, static=self.fstatic())
         self.n_lookups += n
-        return alive, vals
+        return np.asarray(alive)[:n], np.asarray(vals)[:n]
 
     def adjusted_predict(self, queries: np.ndarray) -> np.ndarray:
         """Paper Eq. 1 / Module 3: logical position M'(k) = Γ̄·M(k) + r(k),
@@ -358,12 +247,8 @@ class UpLIF:
         r(k) is the BMAT bias (Phase 1). Exposed for validation."""
         queries = np.asarray(queries, dtype=np.int64)
         q, n = self._pad(queries, KEY_MAX)
-        j, _ = self._locate_batch(q)
-        arr_rank = np.asarray(
-            np.asarray(_logical_rank(self.slots.keys, self.slots.occ, self.slots.vals, q))[:n]
-        )
-        r = np.asarray(self.bmat.rank(queries)) if self.bmat.size else 0
-        return arr_rank + r
+        rank = fops.adjusted_rank(self.fstate, q, static=self.fstatic())
+        return np.asarray(rank)[:n]
 
     def range_query(self, lo: int, hi: int, max_out: int = 1024):
         """Sorted (keys, vals) with lo <= key <= hi (single range; batched
@@ -376,37 +261,21 @@ class UpLIF:
         return ks[0], vs[0]
 
     def range_query_batch(self, lo: np.ndarray, hi: np.ndarray, max_out: int = 1024):
+        """Batched range extraction. The hot path is ONE jitted program
+        (vmapped fixed-width slice + masked BMAT merge, fops.range_scan);
+        the host only unpacks the padded result rows."""
         lo = np.asarray(lo, dtype=np.int64)
         hi = np.asarray(hi, dtype=np.int64)
-        q, n = self._pad(lo, KEY_MAX)
-        j, _ = self._locate_batch(q)
-        j = np.asarray(j)[:n]
-        start = j + 1  # first slot with key >= lo... j = last slot with key <= lo
-        # adjust: j points at last key <= lo; if that key == lo include it
-        sk = np.asarray(self.slots.keys)
-        sv = np.asarray(self.slots.vals)
-        so = np.asarray(self.slots.occ)
-        out_keys, out_vals = [], []
-        for i in range(n):
-            s = max(int(start[i]), 0)
-            if int(j[i]) >= 0 and sk[int(j[i])] == lo[i]:
-                s = int(j[i])
-            e = min(s + max_out * 4, self.capacity)
-            seg_k = sk[s:e]
-            seg_v = sv[s:e]
-            seg_o = so[s:e]
-            m = seg_o & (seg_k <= hi[i]) & (seg_v != TOMBSTONE)
-            ak, av = seg_k[m], seg_v[m]
-            if self.bmat.size:
-                bk, bv = self.bmat.extract(int(lo[i]), int(hi[i]))
-            else:
-                bk = np.zeros(0, dtype=np.int64)
-                bv = bk
-            mk = np.concatenate([ak, bk])
-            mv = np.concatenate([av, bv])
-            o = np.argsort(mk, kind="stable")
-            out_keys.append(mk[o][:max_out])
-            out_vals.append(mv[o][:max_out])
+        ql, n = self._pad(lo, KEY_MAX)
+        qh, _ = self._pad(hi, 0)
+        res = fops.range_scan(
+            self.fstate, ql, qh, static=self.fstatic(), max_out=max_out
+        )
+        ks = np.asarray(res.keys)
+        vs = np.asarray(res.vals)
+        counts = np.asarray(res.count)
+        out_keys = [ks[i, : counts[i]] for i in range(n)]
+        out_vals = [vs[i, : counts[i]] for i in range(n)]
         return out_keys, out_vals
 
     # -- updates ---------------------------------------------------------------
@@ -419,106 +288,21 @@ class UpLIF:
         assert keys.shape == vals.shape
         if len(keys) == 0:
             return 0
-        # batch-internal dedup, last write wins
-        o = np.argsort(keys, kind="stable")
-        keys, vals = keys[o], vals[o]
-        last = np.concatenate([keys[1:] != keys[:-1], [True]])
-        keys, vals = keys[last], vals[last]
         self._observe_updates(keys)
-
-        pending_k, pending_v = keys, vals
-        overflow = 0
-        for _ in range(self.cfg.insert_rounds):
-            if len(pending_k) == 0:
-                break
-            pending_k, pending_v = self._insert_round(pending_k, pending_v)
-        if len(pending_k):
-            overflow = len(pending_k)
-            self.n_overflow += overflow
-            self.bmat.merge(pending_k, pending_v)
-        return overflow
-
-    def _insert_round(self, keys: np.ndarray, vals: np.ndarray, check_bmat: bool = True):
-        q, n = self._pad(keys, KEY_MAX)
+        q, _ = self._pad(keys, KEY_MAX)
         v, _ = self._pad(vals, 0)
-        j, start = self._locate_batch(q)
-        hit, alive, _, jj = _probe(
-            self.slots.keys, self.slots.vals, self.slots.occ, j, q
-        )
-        # value updates for keys already in place (incl. tombstone revival)
-        if bool(hit.any()):
-            revived = int(jnp.sum(hit & ~alive))
-            new_vals = _scatter_vals(self.slots.vals, jj, v, hit)
-            self.slots = self.slots._replace(vals=new_vals)
-            self.n_keys += revived
-        # keys already buffered in BMAT -> value update there (skipped when
-        # migrating keys OUT of the BMAT during a subset retrain)
-        fresh = ~np.asarray(hit)[:n]
-        if check_bmat and self.bmat.size > 0 and fresh.any():
-            bf, _ = self.bmat.lookup(keys)
-            bf = np.asarray(bf)
-            upd = bf & fresh
-            if upd.any():
-                self.bmat.merge(keys[upd], vals[upd])
-                fresh &= ~upd
-        if not fresh.any():
-            return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
-
-        # sort the fresh sub-batch by window start for the overlap test
-        fk, fv = keys[fresh], vals[fresh]
-        qf, nf = self._pad(fk, KEY_MAX)
-        vf, _ = self._pad(fv, 0)
-        _, startf = self._locate_batch(qf)
-        startf = np.array(startf)  # writable host copy
-        startf[nf:] = self.capacity + 7  # padding rows: OOB, never accepted
-        o = np.argsort(startf, kind="stable")
-        startf = startf[o]
-        qs, vs = qf[o], vf[o]
-        valid_np = np.asarray(qs != KEY_MAX)
-        accept_np = _greedy_accept(startf, valid_np, self.cfg.window)
-        ss = jnp.asarray(np.minimum(startf, self.capacity - self.cfg.window))
-        valid = jnp.asarray(valid_np)
-        sk, sv2, so, can, min_span = _inplace_insert(
-            self.slots.keys,
-            self.slots.vals,
-            self.slots.occ,
-            qs,
-            vs,
-            ss,
-            jnp.asarray(accept_np),
-            valid,
-            self.cfg.window,
-            self.cfg.movement_k,
-        )
-        self.slots = SlotsState(keys=sk, vals=sv2, occ=so)
-        can = np.asarray(can)
-        ok = can & np.asarray(valid)
-        self.n_inplace += int(ok.sum())
-        self.n_keys += int(ok.sum())
-        ms = int(min_span)
-        if ms < self.min_granularity:
-            self.min_granularity = ms
-        left = ~ok & np.asarray(valid)
-        return np.asarray(qs)[left], np.asarray(vs)[left]
+        self._ensure_bmat_capacity(int(q.shape[0]))
+        state, res = fops.insert(self.fstate, q, v, static=self.fstatic())
+        self._adopt(state)
+        return int(res.n_overflow)
 
     def delete(self, keys: np.ndarray) -> np.ndarray:
         """Batched delete (tombstones; compacted at retrain). Returns hits."""
         keys = np.asarray(keys, dtype=np.int64)
         q, n = self._pad(keys, KEY_MAX)
-        j, _ = self._locate_batch(q)
-        hit, alive, _, jj = _probe(
-            self.slots.keys, self.slots.vals, self.slots.occ, j, q
-        )
-        if bool(alive.any()):
-            tomb = jnp.full(q.shape, TOMBSTONE, dtype=jnp.int64)
-            new_vals = _scatter_vals(self.slots.vals, jj, tomb, alive)
-            self.slots = self.slots._replace(vals=new_vals)
-            self.n_keys -= int(np.asarray(alive)[:n].sum())
-        out = np.asarray(alive)[:n]
-        if self.bmat.size > 0 and not out.all():
-            bf = self.bmat.delete(keys)
-            out = out | bf
-        return out
+        state, hit = fops.delete(self.fstate, q, static=self.fstatic())
+        self._adopt(state)
+        return np.asarray(hit)[:n]
 
     # -- D_update estimation (Phase 2) ----------------------------------------
     def _observe_updates(self, keys: np.ndarray):
@@ -550,7 +334,10 @@ class UpLIF:
         vals = np.concatenate([av, bv])
         o = np.argsort(keys, kind="stable")
         keys, vals = keys[o], vals[o]
-        self.bmat = BMAT(self.bmat.tree_type, self.cfg.bmat_fanout)
+        self.bmat = BMAT(
+            self.bmat.tree_type, self.cfg.bmat_fanout,
+            capacity=self.cfg.bmat_capacity,
+        )
         self._bulk_load(keys, vals, self.refreshed_gmm())
         self.n_retrains += 1
 
@@ -571,19 +358,22 @@ class UpLIF:
         ck, cv = bk[m], bv[m]
         if len(ck) == 0:
             return 0
-        pending_k, pending_v = ck, cv
-        for _ in range(3):
-            if len(pending_k) == 0:
-                break
-            pending_k, pending_v = self._insert_round(
-                pending_k, pending_v, check_bmat=False
-            )
-        absorbed = len(ck) - len(pending_k)
+        q, nf = self._pad(ck, KEY_MAX)
+        v, _ = self._pad(cv, 0)
+        state, res = fops.insert(
+            self.fstate, q, v, static=self.fstatic(),
+            check_bmat=False, merge_overflow=False,
+        )
+        self._adopt(state)
+        absorbed_mask = ~np.asarray(res.pending)[:nf]
+        absorbed = int(absorbed_mask.sum())
         if absorbed > 0:
-            absorbed_keys = np.setdiff1d(ck, pending_k, assume_unique=True)
             keys_all, vals_all = self.bmat.extract()
-            keep = ~np.isin(keys_all, absorbed_keys)
+            keep = ~np.isin(keys_all, ck[absorbed_mask])
             self.bmat._rebuild(keys_all[keep], vals_all[keep])
+            self._counters = self._counters._replace(
+                n_bmat_live=jnp.asarray(int(keep.sum()), dtype=jnp.int64)
+            )
         self.n_retrains += 1
         return absorbed
 

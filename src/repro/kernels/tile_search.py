@@ -25,7 +25,9 @@ def _kernel(tile_hi_ref, tile_lo_ref, q_hi_ref, q_lo_ref, out_ref):
     leq = (th[None, :] < qh[:, None]) | (
         (th[None, :] == qh[:, None]) & (tl[None, :] <= ql[:, None])
     )
-    out_ref[0, :] = jnp.sum(leq.astype(jnp.int32), axis=1) - 1
+    # dtype pinned: with x64 enabled jnp.sum would promote int32 -> int64,
+    # which the int32 output ref rejects
+    out_ref[0, :] = jnp.sum(leq, axis=1, dtype=jnp.int32) - 1
 
 
 def tile_search_pallas(

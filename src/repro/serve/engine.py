@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import UpLIF
+from repro.core.sharded import ShardedUpLIF
 from repro.core.uplif import UpLIFConfig
 from repro.models.transformer import decode_step, forward_lm, init_cache
 
@@ -36,13 +36,30 @@ def prefix_fingerprints(tokens: np.ndarray, every: int = 16) -> np.ndarray:
 
 
 class PrefixCacheIndex:
-    """fingerprint -> cache-slot id, on UpLIF."""
+    """fingerprint -> cache-slot id, on a sharded UpLIF keyspace router.
 
-    def __init__(self, capacity_hint: int = 4096):
-        seed_keys = np.arange(1, 8, dtype=np.int64)  # non-empty bootstrap
-        self.index = UpLIF(
-            seed_keys, np.zeros(7, dtype=np.int64) - 1,
-            UpLIFConfig(batch_bucket=256),
+    ``capacity_hint`` (expected number of live fingerprints) sizes the
+    index: it picks the shard count of the router (one shard per ~2k
+    fingerprints, capped at 8) and presizes each shard's delta buffer so
+    the steady-state insert path never reallocates. Fingerprints are
+    uniform 52-bit hashes, so evenly spaced bootstrap boundaries keep the
+    shards balanced from the first admission on.
+    """
+
+    def __init__(self, capacity_hint: int = 4096, n_shards: Optional[int] = None):
+        self.capacity_hint = int(capacity_hint)
+        if n_shards is None:
+            n_shards = max(1, min(8, self.capacity_hint // 2048))
+        # bootstrap keys spread over the fingerprint domain -> balanced
+        # shard boundaries (vals -1 = "no slot", never matched)
+        n_seed = max(8, 2 * n_shards)
+        seed_keys = np.linspace(1, _MASK, n_seed).astype(np.int64)
+        per_shard_buf = max(256, self.capacity_hint // max(n_shards, 1))
+        self.index = ShardedUpLIF(
+            seed_keys,
+            np.full(n_seed, -1, dtype=np.int64),
+            UpLIFConfig(batch_bucket=256, bmat_capacity=per_shard_buf),
+            n_shards=n_shards,
         )
         self.slots: Dict[int, Any] = {}
         self._next_slot = 0
@@ -50,17 +67,21 @@ class PrefixCacheIndex:
         self.misses = 0
 
     def match(self, fps: np.ndarray) -> Tuple[int, int]:
-        """Longest cached prefix: returns (slot_id, n_prefix_blocks) or (-1, 0)."""
+        """Longest cached prefix whose slot is still resident: returns
+        (slot_id, n_prefix_blocks) or (-1, 0). A matched-but-evicted slot
+        is not a hit — the caller gets (and we count) exactly what it can
+        actually reuse, so hits + misses stays consistent with evictions."""
         if len(fps) == 0:
             return -1, 0
         found, slot = self.index.lookup(fps)
         valid = found & (slot >= 0)
-        if not valid.any():
-            self.misses += 1
-            return -1, 0
-        last = int(np.nonzero(valid)[0].max())
-        self.hits += 1
-        return int(slot[last]), last + 1
+        for i in reversed(np.nonzero(valid)[0]):
+            sid = int(slot[i])
+            if sid in self.slots:
+                self.hits += 1
+                return sid, int(i) + 1
+        self.misses += 1
+        return -1, 0
 
     def admit(self, fps: np.ndarray, state: Any) -> int:
         sid = self._next_slot
@@ -116,7 +137,8 @@ class ServeEngine:
         for req in requests:
             fps = prefix_fingerprints(req.prompt)
             sid, nblk = self.prefix_index.match(fps)
-            if sid >= 0 and sid in self.prefix_index.slots:
+            # match() only returns slots that are still resident
+            if sid >= 0:
                 cached_len, cache, logits = self.prefix_index.slots[sid]
                 tail = req.prompt[cached_len:]
             else:

@@ -1,7 +1,8 @@
 """BMAT: rank oracle, merge semantics, tombstones, growth — both tree types."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 import repro.core  # noqa: F401
 from repro.core.bmat import BMAT, BPMAT, RBMAT, KEY_MAX

@@ -1,7 +1,8 @@
 """RadixSpline: error bound, monotonicity, determinism (unit + property)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 import repro.core  # noqa: F401 — x64
 import jax.numpy as jnp

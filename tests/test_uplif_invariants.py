@@ -1,7 +1,8 @@
 """UpLIF end-to-end invariants vs a host oracle (unit + hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+from tests._hypothesis_compat import HealthCheck, given, settings, st
 
 import repro.core  # noqa: F401
 from repro.core import UpLIF
