@@ -39,9 +39,11 @@ def run(n_keys: int = 200_000, episodes: int = 80, seed: int = 0):
     keys = make_dataset("wikits", n_keys, seed)
     rows = []
 
-    # train agent
+    # train agent — seeded end to end (dataset, workload runner AND the
+    # agent's exploration RNG) so reruns walk the identical trajectory
     runner, idx = _make(keys, seed)
-    agent = QLearningAgent(AgentConfig(alpha=0.8, gamma=0.2, eta=0.7))
+    agent = QLearningAgent(AgentConfig(alpha=0.8, gamma=0.2, eta=0.7,
+                                       seed=seed))
     hist = agent.train(idx, _run_ops_factory(runner, 0.5), episodes=episodes)
     rew = [h["reward"] for h in hist]
 
@@ -85,6 +87,9 @@ def run(n_keys: int = 200_000, episodes: int = 80, seed: int = 0):
                 f"first5={np.mean(rew[:5]):.3f} last5={np.mean(rew[-5:]):.3f} "
                 f"states={len(agent.q)}"
             ),
+            "episodes": episodes,
+            "n_keys": n_keys,
+            "seed": seed,
         }
     )
     emit(rows, "rl_tuning")

@@ -1,0 +1,264 @@
+"""Online self-tuning under distribution shift (ISSUE 2 acceptance bench).
+
+Reproduces the Section 5.3 regime end to end on the sharded router: a
+write-heavy workload whose insert stream SHIFTS mid-run from the bootstrap
+key range to a previously-unseen upper range. Three maintenance policies
+run the identical (deterministically seeded) op sequence:
+
+  tuned          — the tuning subsystem (telemetry → forecast → controller
+                   → scheduler) runs between waves with its default budget;
+  never_tune     — no maintenance: the delta buffer absorbs the shift
+                   (grows, reallocates, recompiles, slows every op);
+  always_retrain — full retrain on a fixed cadence, paying the whole-index
+                   rebuild whether or not any shard needs it.
+
+Each policy runs in its OWN subprocess, so every policy pays its own cold
+jit-compile and reallocation debt — sharing one process would let whoever
+runs second reuse the first policy's compiled variants, which is exactly
+the cost axis the policies differ on. Reported throughput covers the FULL
+run: maintenance, reallocation and recompilation included.
+
+The comparison row reports both raw throughput and the paper's Section 4.3
+composite objective R = η·tput/max_tput − (1−η)·mem/max_mem (η = 0.7),
+which is the quantity the controller actually optimizes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+ETA = 0.7  # Section 5.1 reward weight
+
+POLICIES = ("tuned", "never_tune", "always_retrain")
+
+
+def _workload(n_keys: int, waves: int, batch: int, seed: int):
+    """Deterministic wave list: (read_keys, insert_keys) tuples with the
+    insert stream shifting to the upper key range at waves//3."""
+    from repro.data import make_dataset
+
+    keys = np.sort(make_dataset("wikits", n_keys, seed))
+    n_init = n_keys // 2
+    init = keys[:n_init]
+    upper = keys[n_init:].copy()
+    rng = np.random.default_rng(seed + 1)
+    rng.shuffle(upper)
+    # phase-1 inserts: fresh keys interleaved INSIDE the bootstrap range
+    lo, hi = int(init[0]), int(init[-1])
+    in_range = rng.integers(lo, hi, waves * batch).astype(np.int64)
+    in_range = np.setdiff1d(in_range, init)[: waves * batch]
+    rng.shuffle(in_range)
+    shift_at = waves // 3
+    plan = []
+    known = init
+    ip1 = ip2 = 0
+    n_w = batch // 2
+    for w in range(waves):
+        if w < shift_at:
+            ins = in_range[ip1 : ip1 + n_w]
+            ip1 += n_w
+        else:
+            ins = upper[ip2 : ip2 + n_w]
+            ip2 += n_w
+            if ip2 + n_w > len(upper):
+                ip2 = 0
+        reads = rng.choice(known, batch - n_w)
+        if w % 8 == 0:
+            known = np.concatenate([known, ins])
+        plan.append((reads, ins))
+    return init, plan, shift_at
+
+
+def _run_policy(
+    policy: str,
+    init: np.ndarray,
+    plan,
+    *,
+    n_shards: int,
+    retrain_every: int,
+    seed: int,
+):
+    import repro.core  # noqa: F401 — x64
+    from repro.core import ShardedUpLIF
+    from repro.core.uplif import UpLIFConfig
+    from repro.tuning import SelfTuner, TunerConfig
+    from repro.tuning.controller import ControllerConfig
+    from repro.tuning.forecast import ForecastConfig
+    from repro.tuning.scheduler import SchedulerConfig
+
+    idx = ShardedUpLIF(
+        init, init + 1, UpLIFConfig(batch_bucket=4096), n_shards=n_shards
+    )
+    tuner = None
+    if policy == "tuned":
+        tuner = SelfTuner(
+            TunerConfig(
+                controller=ControllerConfig(seed=seed),
+                forecast=ForecastConfig(seed=seed),
+                scheduler=SchedulerConfig(),
+            )
+        ).attach(idx)
+    ops = 0
+    t0 = time.perf_counter()
+    for w, (reads, ins) in enumerate(plan):
+        w0 = time.perf_counter()
+        idx.lookup(reads)
+        idx.insert(ins, ins + 1)
+        ops += len(reads) + len(ins)
+        if tuner is not None:
+            tuner.observe_inserts(ins)
+            tuner.after_wave(
+                len(reads) + len(ins), time.perf_counter() - w0
+            )
+        elif policy == "always_retrain" and (w + 1) % retrain_every == 0:
+            idx.retrain_full()
+    dt = time.perf_counter() - t0
+    # correctness probe: every policy must agree on what it stored
+    probe_r, probe_i = plan[-1]
+    f, v = idx.lookup(probe_i)
+    assert f.all() and np.array_equal(v, probe_i + 1), policy
+    return {
+        "policy": policy,
+        "ops_per_s": ops / dt,
+        "seconds": dt,
+        "index_bytes": int(idx.index_bytes()),
+        "n_shards": idx.n_shards,
+        "n_retrains": idx.n_retrains,
+        "n_splits": idx.n_splits,
+        "n_merges": idx.n_merges,
+        "bmat_size": int(np.asarray(idx.state.bmat.size).sum()),
+        "tuner": tuner.stats() if tuner else None,
+    }
+
+
+def _spawn_policy(policy: str, ns) -> dict:
+    """Run one policy in a clean subprocess (own jit cache) and collect."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+        out_path = f.name
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    cmd = [
+        sys.executable, "-m", "benchmarks.bench_self_tuning",
+        "--policy", policy, "--out", out_path,
+        "--n-keys", str(ns.n_keys), "--waves", str(ns.waves),
+        "--batch", str(ns.batch), "--shards", str(ns.shards),
+        "--retrain-every", str(ns.retrain_every), "--seed", str(ns.seed),
+    ]
+    try:
+        subprocess.run(cmd, check=True, timeout=1800, env=env)
+        with open(out_path) as fh:
+            return json.load(fh)
+    finally:
+        os.unlink(out_path)
+
+
+def run(
+    n_keys: int = 200_000,
+    waves: int = 90,
+    batch: int = 4096,
+    n_shards: int = 4,
+    retrain_every: int = 8,
+    seed: int = 0,
+):
+    from benchmarks.common import emit
+
+    ns = argparse.Namespace(
+        n_keys=n_keys, waves=waves, batch=batch, shards=n_shards,
+        retrain_every=retrain_every, seed=seed,
+    )
+    results = {p: _spawn_policy(p, ns) for p in POLICIES}
+    max_tput = max(r["ops_per_s"] for r in results.values())
+    max_mem = max(r["index_bytes"] for r in results.values())
+    rows = []
+    for policy, res in results.items():
+        res["objective"] = (
+            ETA * res["ops_per_s"] / max_tput
+            - (1 - ETA) * res["index_bytes"] / max_mem
+        )
+        extra = ""
+        if res["tuner"]:
+            acts = res["tuner"]["actions"]
+            extra = " " + ",".join(f"{k}={v}" for k, v in acts.items() if v)
+        rows.append(
+            {
+                "name": policy,
+                "us_per_call": round(1e6 / res["ops_per_s"], 3),
+                "derived": (
+                    f"{res['ops_per_s']/1e6:.4f} Mops/s, "
+                    f"{res['index_bytes']/2**20:.2f} MiB, "
+                    f"R={res['objective']:.3f}, "
+                    f"bmat={res['bmat_size']}, S={res['n_shards']}" + extra
+                ),
+                **{k: v for k, v in res.items() if k != "tuner"},
+                "tuner_stats": res["tuner"],
+            }
+        )
+    best_fixed = max(
+        results["never_tune"]["objective"],
+        results["always_retrain"]["objective"],
+    )
+    best_fixed_tput = max(
+        results["never_tune"]["ops_per_s"],
+        results["always_retrain"]["ops_per_s"],
+    )
+    shift_at = waves // 3
+    rows.append(
+        {
+            "name": "tuned_vs_best_fixed",
+            "us_per_call": "",
+            "derived": (
+                f"objective {results['tuned']['objective']:.3f} vs "
+                f"{best_fixed:.3f}, tput ratio "
+                f"{results['tuned']['ops_per_s']/best_fixed_tput:.3f}, "
+                f"shift_at_wave={shift_at}/{waves}"
+            ),
+            "tuned_objective": results["tuned"]["objective"],
+            "best_fixed_objective": best_fixed,
+            "tput_ratio": results["tuned"]["ops_per_s"] / best_fixed_tput,
+            "shift_at": shift_at,
+            "waves": waves,
+        }
+    )
+    emit(rows, "self_tuning")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", choices=POLICIES, default=None)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--n-keys", type=int, default=200_000)
+    ap.add_argument("--waves", type=int, default=90)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--retrain-every", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.policy is None:
+        run(
+            n_keys=args.n_keys, waves=args.waves, batch=args.batch,
+            n_shards=args.shards, retrain_every=args.retrain_every,
+            seed=args.seed,
+        )
+        return
+    init, plan, _ = _workload(args.n_keys, args.waves, args.batch, args.seed)
+    res = _run_policy(
+        args.policy, init, plan,
+        n_shards=args.shards, retrain_every=args.retrain_every,
+        seed=args.seed,
+    )
+    with open(args.out, "w") as fh:
+        json.dump(res, fh)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ Sections:
   fig6b_memory       — Fig 6b (index memory)
   fig6c_scalability  — Fig 6c (throughput vs init scale)
   rl_tuning          — Section 4 self-tuning agent vs fixed policies
+  self_tuning        — online tuning subsystem vs fixed policies under a
+                       mid-run distribution shift (ISSUE 2 acceptance)
   pipeline_index     — UpLIF as the framework's doc index
   kernels            — Pallas kernel micro (interpret mode)
 """
@@ -36,6 +38,7 @@ def main() -> None:
         bench_range,
         bench_rl_tuning,
         bench_scalability,
+        bench_self_tuning,
         bench_throughput,
     )
 
@@ -57,6 +60,10 @@ def main() -> None:
         ),
         "rl_tuning": lambda: bench_rl_tuning.run(
             n_keys=100_000 if q else 200_000, episodes=20 if q else 80
+        ),
+        "self_tuning": lambda: bench_self_tuning.run(
+            n_keys=100_000 if q else 200_000, waves=45 if q else 90,
+            batch=2048 if q else 4096,
         ),
         "pipeline_index": lambda: bench_pipeline.run(
             n_docs=4096 if q else 16384

@@ -65,7 +65,13 @@ class RangeResult(NamedTuple):
 
 
 def _locate(static: UpLIFStatic, slot_keys, model, queries):
-    """Index j of the last slot with key <= q (-1 if below all keys)."""
+    """(j, ins_cap): j = index of the last slot with key <= q (-1 if below
+    all keys); ins_cap = largest slot index an insert derived from this
+    locate may target. For the exact binsearch ins_cap is just cap-1; for
+    the bounded learned search it is the end of the searched span, so a
+    boundary the span could not prove stays UNPLACED (fails the window
+    accept, overflows to the BMAT) instead of landing outside the rows
+    future lookups will search."""
     cap = slot_keys.shape[0]
     if static.locate == LOCATE_BINSEARCH:
         # B+Tree analogue: full bisect, log2(capacity) dependent probes.
@@ -80,16 +86,26 @@ def _locate(static: UpLIFStatic, slot_keys, model, queries):
         lo = jnp.zeros(queries.shape, dtype=jnp.int64)
         hi = jnp.full(queries.shape, cap, dtype=jnp.int64)
         lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
-        return lo - 1
+        return lo - 1, jnp.full(queries.shape, cap - 1, dtype=jnp.int64)
 
-    # Learned path: spline predict + ceil(log2(W)) probes inside the window.
+    # Learned path: spline predict + bounded probes over the 3-row span
+    # around the prediction. Why 3 rows and not one centered window: an
+    # insert places a key inside the W-aligned grid row of its (correct)
+    # insertion point, and later in-row shifts never move it across a row
+    # edge — but they can drift it up to W-1 slots from where the model
+    # predicted. Both the placement row and any bulk-loaded key's row lie
+    # within rows {row(c)-1, row(c), row(c)+1}, so searching that span
+    # finds every live key REGARDLESS of accumulated drift (costs two
+    # extra bisect probes vs the old +-W/2 window, which lost keys under
+    # heavy localized inserts).
     window = static.window
-    n_bisect = max(1, int(np.ceil(np.log2(window))))
+    L = min(3 * window, cap)
+    n_bisect = max(1, int(np.ceil(np.log2(L))))
     p = _rs_predict_impl(model, queries, static.rs_iters)
     c = jnp.clip(jnp.round(p).astype(jnp.int64), 0, cap - 1)
-    start = jnp.clip(c - window // 2, 0, max(cap - window, 0))
+    start = jnp.clip((c // window - 1) * window, 0, max(cap - L, 0))
     lo = start
-    hi = jnp.minimum(start + window - 1, cap - 1)
+    hi = jnp.minimum(start + L - 1, cap - 1)
 
     def body(_, carry):
         lo, hi = carry
@@ -98,7 +114,8 @@ def _locate(static: UpLIFStatic, slot_keys, model, queries):
         return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
 
     lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
-    return jnp.where(slot_keys[start] <= queries, lo, start - 1)
+    j = jnp.where(slot_keys[start] <= queries, lo, start - 1)
+    return j, start + (L - 1)
 
 
 def _probe(slot_keys, slot_vals, slot_occ, j, queries):
@@ -151,7 +168,7 @@ def _bmat_probe(bmat: BMATState, ranks, queries):
 def lookup(state: UpLIFState, queries, *, static: UpLIFStatic):
     """Batched point lookup -> (found bool[n], values int64[n]). Pure: the
     state is read-only, so lookups never force a state swap."""
-    j = _locate(static, state.slots.keys, state.model, queries)
+    j, _ = _locate(static, state.slots.keys, state.model, queries)
     _, alive, vals, _ = _probe(
         state.slots.keys, state.slots.vals, state.slots.occ, j, queries
     )
@@ -344,7 +361,7 @@ def insert(
 
     for rnd in range(max(1, static.insert_rounds)):
         qk = jnp.where(pending, keys, KEY_MAX)
-        j = _locate(static, sk, state.model, qk)
+        j, icap = _locate(static, sk, state.model, qk)
         if rnd == 0:
             # upsert keys already in the slot array (revives tombstones)
             hit, alive, _, jj = _probe(sk, sv, so, j, qk)
@@ -366,7 +383,9 @@ def insert(
             j = jnp.where(pending, j, cap - 1)
 
         # ---- grid-segment accept (the on-device greedy replacement) ------
-        ins_slot = jnp.clip(j + 1, 0, cap - 1)
+        # clamp to the locate span so a boundary the bounded search could
+        # not prove lands in the BMAT, never outside the searched rows
+        ins_slot = jnp.clip(jnp.minimum(j + 1, icap), 0, cap - 1)
         bucket = jnp.where(pending, ins_slot // W, jnp.int64(cap // W + 1))
         order = jnp.argsort(bucket)  # stable: ties keep key order
         qs = qk[order]
@@ -426,7 +445,7 @@ def delete(state: UpLIFState, keys, *, static: UpLIFStatic):
     cap = sk.shape[0]
     canonical = ~_dedup_last_wins(keys)
 
-    j = _locate(static, sk, state.model, keys)
+    j, _ = _locate(static, sk, state.model, keys)
     _, alive, _, jj = _probe(sk, sv, so, j, keys)
     once = alive & canonical
     sv = sv.at[jnp.where(once, jj, cap + 1)].set(TOMBSTONE, mode="drop")
@@ -471,7 +490,7 @@ def range_scan(
     cap = sk.shape[0]
     L = min(4 * max_out, cap)
 
-    j = _locate(static, sk, state.model, lo)
+    j, _ = _locate(static, sk, state.model, lo)
     jj = jnp.clip(j, 0, cap - 1)
     s = jnp.where((j >= 0) & (sk[jj] == lo), jj, j + 1)
     s = jnp.clip(s, 0, cap - L)
@@ -553,7 +572,8 @@ def range_scan(
 
 
 def _locate_stacked(static: UpLIFStatic, slot_keys, model, q, sid):
-    """Shard-local index j of the last slot of shard ``sid`` with key <= q.
+    """Shard-local (j, ins_cap) of the last slot of shard ``sid`` with
+    key <= q (same contract as ``_locate``).
 
     ``slot_keys`` is [S, cap]; ``q``/``sid`` are flat [N].
     """
@@ -573,10 +593,11 @@ def _locate_stacked(static: UpLIFStatic, slot_keys, model, q, sid):
         lo = jnp.zeros(q.shape, dtype=jnp.int64)
         hi = jnp.full(q.shape, cap, dtype=jnp.int64)
         lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
-        return lo - 1
+        return lo - 1, jnp.full(q.shape, cap - 1, dtype=jnp.int64)
 
     W = static.window
-    n_bisect = max(1, int(np.ceil(np.log2(W))))
+    L = min(3 * W, cap)  # 3-row drift-proof span (see _locate)
+    n_bisect = max(1, int(np.ceil(np.log2(L))))
     T = model.table.shape[1]
     K = model.spline_keys.shape[1]
     tflat = model.table.reshape(-1)
@@ -611,9 +632,9 @@ def _locate_stacked(static: UpLIFStatic, slot_keys, model, q, sid):
     p = p0 + t * (p1 - p0)
 
     c = jnp.clip(jnp.round(p).astype(jnp.int64), 0, cap - 1)
-    start = jnp.clip(c - W // 2, 0, max(cap - W, 0))
+    start = jnp.clip((c // W - 1) * W, 0, max(cap - L, 0))
     lo = base + start
-    hi = base + jnp.minimum(start + W - 1, cap - 1)
+    hi = base + jnp.minimum(start + L - 1, cap - 1)
 
     def wbody(_, carry):
         lo, hi = carry
@@ -622,7 +643,8 @@ def _locate_stacked(static: UpLIFStatic, slot_keys, model, q, sid):
         return jnp.where(go, mid, lo), jnp.where(go, hi, mid - 1)
 
     lo, hi = jax.lax.fori_loop(0, n_bisect, wbody, (lo, hi))
-    return jnp.where(flat[base + start] <= q, lo - base, start - 1)
+    j = jnp.where(flat[base + start] <= q, lo - base, start - 1)
+    return j, start + (L - 1)
 
 
 def _probe_stacked(slots: SlotsState, j, q, sid):
@@ -717,7 +739,7 @@ def _route_on_device(boundaries, q):
 def slookup(state: UpLIFState, q, boundaries, *, static: UpLIFStatic):
     """Stacked lookup: state leaves are [S, ...]; q is flat [N]."""
     sid = _route_on_device(boundaries, q)
-    j = _locate_stacked(static, state.slots.keys, state.model, q, sid)
+    j, _ = _locate_stacked(static, state.slots.keys, state.model, q, sid)
     _, alive, vals, _ = _probe_stacked(state.slots, j, q, sid)
     ranks = _bmat_rank_stacked(static, state.bmat, q, sid)
     _, b_alive, b_vals, _ = _bmat_probe_stacked(state.bmat, ranks, q, sid)
@@ -732,7 +754,7 @@ def sdelete(state: UpLIFState, q, boundaries, *, static: UpLIFStatic):
     sid = _route_on_device(boundaries, q)
     canonical = ~_dedup_last_wins(q)
 
-    j = _locate_stacked(static, state.slots.keys, state.model, q, sid)
+    j, _ = _locate_stacked(static, state.slots.keys, state.model, q, sid)
     _, alive, _, jj = _probe_stacked(state.slots, j, q, sid)
     once = alive & canonical
     sv = state.slots.vals.reshape(-1).at[
@@ -872,7 +894,7 @@ def sinsert(state: UpLIFState, keys, vals, boundaries, *, static: UpLIFStatic):
             occ=so.reshape(S, cap),
         )
         qk = jnp.where(pending, keys, KEY_MAX)
-        j = _locate_stacked(static, slots2.keys, state.model, qk, sid)
+        j, icap = _locate_stacked(static, slots2.keys, state.model, qk, sid)
         if rnd == 0:
             hit, alive, _, jj = _probe_stacked(slots2, j, qk, sid)
             n_keys = n_keys + _seg_add(S, sid, hit & ~alive)
@@ -891,7 +913,7 @@ def sinsert(state: UpLIFState, keys, vals, boundaries, *, static: UpLIFStatic):
             qk = jnp.where(pending, keys, KEY_MAX)
 
         # ---- global grid-segment accept over the flat view ---------------
-        ins_slot = jnp.clip(j + 1, 0, cap - 1)
+        ins_slot = jnp.clip(jnp.minimum(j + 1, icap), 0, cap - 1)
         bucket = jnp.where(
             pending, sid * nw_per + ins_slot // W, jnp.int64(S * nw_per + 1)
         )

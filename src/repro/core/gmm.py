@@ -101,5 +101,21 @@ def gmm_cdf(state: GMMState, x: jnp.ndarray) -> jnp.ndarray:
     return (state.weights[None, :] * comp).sum(axis=1)
 
 
+def gmm_cdf_np(state: GMMState, x: np.ndarray) -> np.ndarray:
+    """Host-side mixture CDF (numpy/scipy). The jitted ``gmm_cdf`` pays a
+    fresh XLA compile for every distinct input length, which turns the
+    variable-length host callers (nullifier gap sizing at retrain, the
+    tuning forecaster) into compile mills; a K-component erf over numpy is
+    microseconds at any length."""
+    from scipy.special import erf  # scipy ships with jax
+
+    x = np.asarray(x, dtype=np.float64)
+    w = np.asarray(state.weights)
+    mu = np.asarray(state.means)
+    sd = np.asarray(state.stds)
+    z = (x[:, None] - mu[None, :]) / (sd[None, :] * _SQRT2)
+    return (w[None, :] * 0.5 * (1.0 + erf(z))).sum(axis=1)
+
+
 def gmm_memory_bytes(state: GMMState) -> int:
     return sum(int(np.prod(a.shape)) * a.dtype.itemsize for a in state)

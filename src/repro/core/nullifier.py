@@ -17,7 +17,7 @@ from typing import NamedTuple, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gmm import gmm_cdf
+from repro.core.gmm import gmm_cdf_np
 from repro.core.types import GMMState, KEY_MAX, SlotsState
 
 
@@ -34,9 +34,17 @@ def gap_sizes(
     *,
     alpha_target: float,
     d_max: int,
+    quantize: str = "ceil",
 ) -> np.ndarray:
     """Eq. 6 gap counts for each key (gap before key i, i.e. between k_{i-1}
-    and k_i; the first key gets the [k_0 - 1, k_0] mass)."""
+    and k_i; the first key gets the [k_0 - 1, k_0] mass).
+
+    ``quantize`` picks how fractional quotas become whole slots: "ceil"
+    (default) guarantees a slot wherever D_update puts any mass — but that
+    makes the total at least one slot per positive-mass pair, so the mean
+    gap α cannot fall much below 1 however small ``alpha_target`` is.
+    "round" keeps the total ≈ the α·N budget (sparse gaps, concentrated
+    where the mass is) — the mode capacity-fitted retrains need."""
     keys = np.asarray(keys, dtype=np.int64)
     n = len(keys)
     if n == 0:
@@ -44,13 +52,18 @@ def gap_sizes(
     budget = float(alpha_target) * n
     kf = keys.astype(np.float64)
     edges = np.concatenate([[kf[0] - (kf[1] - kf[0] if n > 1 else 1.0)], kf])
-    cdf = np.asarray(gmm_cdf(gmm, jnp.asarray(edges)))
+    # host CDF: edge counts vary per call, the jitted path would recompile
+    cdf = gmm_cdf_np(gmm, edges)
     mass = np.maximum(np.diff(cdf), 0.0)
     total = mass.sum()
     if total <= 0:
         mass = np.full(n, 1.0 / n)
         total = 1.0
-    g = np.ceil(budget * mass / total).astype(np.int64)
+    quota = budget * mass / total
+    if quantize == "round":
+        g = np.round(quota).astype(np.int64)
+    else:
+        g = np.ceil(quota).astype(np.int64)
     return np.minimum(g, int(d_max))
 
 
@@ -63,6 +76,7 @@ def nullify(
     d_max: int = 64,
     tail_slack: int = 8,
     align: int = 1,
+    quantize: str = "ceil",
 ) -> NullifyResult:
     """Produce the D_update-expanded slot array (Definition 4).
 
@@ -74,7 +88,9 @@ def nullify(
     keys = np.asarray(keys, dtype=np.int64)
     vals = np.asarray(vals, dtype=np.int64)
     n = len(keys)
-    g = gap_sizes(keys, gmm, alpha_target=alpha_target, d_max=d_max)
+    g = gap_sizes(
+        keys, gmm, alpha_target=alpha_target, d_max=d_max, quantize=quantize
+    )
     positions = (np.cumsum(g) + np.arange(n)).astype(np.int64)
     capacity = int(positions[-1]) + 1 + tail_slack if n else tail_slack
     if align > 1:

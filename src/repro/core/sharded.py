@@ -130,48 +130,61 @@ class ShardedUpLIF:
         self.bmat_kind = self.cfg.bmat_type
         self.n_lookups = 0
         self.n_retrains = 0
+        self.n_splits = 0
+        self.n_merges = 0
         self._rng = np.random.default_rng(0)
         self._restack(shells)
 
     # -- stacking ------------------------------------------------------------
+    @staticmethod
+    def _quant(n: int) -> int:
+        return 1 << max(int(n - 1).bit_length(), 0)
+
     def _restack(self, shells: List[UpLIF]):
-        """Pad every shard's state to common shapes and stack leaf-wise."""
+        """Pad every shard's state to common shapes and stack leaf-wise.
+
+        Shapes are quantized to powers of two and MONOTONE across restacks
+        (they grow geometrically, never shrink): a retrain / split / merge
+        then almost always lands on array shapes the jit cache has already
+        compiled, so background maintenance costs the host rebuild only —
+        not a multi-second XLA recompile of the whole op suite. Padding is
+        inert by the fill-forward invariants, so the only cost is bounded
+        (< 2x) slack in the padded tails."""
         W = self.cfg.window
-        cap = max(sh.capacity for sh in shells)  # W-aligned per shard
-        bcap = max(sh.bmat.capacity for sh in shells)
-        n_knots = max(int(sh.rs_model.spline_keys.shape[0]) for sh in shells)
-        padded = []
-        for sh in shells:
-            st = sh.fstate
-            d = cap - st.slots.keys.shape[0]
-            slots = SlotsState(
-                keys=jnp.pad(st.slots.keys, (0, d), constant_values=KEY_MAX),
-                vals=jnp.pad(st.slots.vals, (0, d)),
-                occ=jnp.pad(st.slots.occ, (0, d)),
-            )
-            k = n_knots - st.model.spline_keys.shape[0]
-            model = st.model._replace(
-                # repeat the last knot: interpolation degenerates to the
-                # knot value, which is exactly the clamped extrapolation
-                spline_keys=jnp.pad(st.model.spline_keys, (0, k), mode="edge"),
-                spline_pos=jnp.pad(st.model.spline_pos, (0, k), mode="edge"),
-            )
-            bd = bcap - st.bmat.keys.shape[0]
-            bkeys = jnp.pad(st.bmat.keys, (0, bd), constant_values=KEY_MAX)
-            bmat = BMATState(
-                keys=bkeys,
-                vals=jnp.pad(st.bmat.vals, (0, bd)),
-                fences=_make_fences(bkeys, self.cfg.bmat_fanout),
-                size=st.bmat.size,
-            )
-            padded.append(
-                UpLIFState(slots=slots, model=model, bmat=bmat,
-                           counters=st.counters)
-            )
+        # monotone vs the live stacked dims (presize/organic growth write
+        # the state directly, so the state IS the source of truth)
+        has_state = hasattr(self, "state")
+        prev_cap = self.state.slots.keys.shape[1] if has_state else 0
+        prev_bcap = self.state.bmat.keys.shape[1] if has_state else 0
+        prev_knots = self.state.model.spline_keys.shape[1] if has_state else 0
+        cap = max(
+            self._quant(max(sh.capacity for sh in shells)), prev_cap, W
+        )
+        bcap = max(
+            self._quant(max(sh.bmat.capacity for sh in shells)), prev_bcap
+        )
+        # knots arrays are tiny (K float64/int64) but their length is a jit
+        # shape — when they must grow, grow with 4x headroom (floor 512) so
+        # shard growth between retrains keeps hitting compiled variants;
+        # when the natural need still fits the previous padding, keep it
+        # (slot caps get no extra headroom: the power-of-two quant already
+        # bounds slack at 2x and slots dominate memory)
+        knots_need = self._quant(
+            max(int(sh.rs_model.spline_keys.shape[0]) for sh in shells)
+        )
+        n_knots = (
+            prev_knots
+            if knots_need <= prev_knots
+            else max(4 * knots_need, 512)
+        )
+        padded = [self._pad_shell(sh, cap, bcap, n_knots) for sh in shells]
         self.state: UpLIFState = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *padded
         )
-        self.rs_iters = max(sh.rs_static.n_search_iters for sh in shells)
+        self.rs_iters = max(
+            max(sh.rs_static.n_search_iters for sh in shells),
+            getattr(self, "rs_iters", 0),
+        )
         self._meta = [
             _ShardMeta(
                 rs_static=sh.rs_static,
@@ -182,6 +195,64 @@ class ShardedUpLIF:
             for sh in shells
         ]
         assert cap % W == 0
+
+    def _pad_shell(
+        self, sh: UpLIF, cap: int, bcap: int, n_knots: int
+    ) -> UpLIFState:
+        """One shard's state padded to the given common stacked shapes."""
+        st = sh.fstate
+        d = cap - st.slots.keys.shape[0]
+        slots = SlotsState(
+            keys=jnp.pad(st.slots.keys, (0, d), constant_values=KEY_MAX),
+            vals=jnp.pad(st.slots.vals, (0, d)),
+            occ=jnp.pad(st.slots.occ, (0, d)),
+        )
+        k = n_knots - st.model.spline_keys.shape[0]
+        model = st.model._replace(
+            # repeat the last knot: interpolation degenerates to the
+            # knot value, which is exactly the clamped extrapolation
+            spline_keys=jnp.pad(st.model.spline_keys, (0, k), mode="edge"),
+            spline_pos=jnp.pad(st.model.spline_pos, (0, k), mode="edge"),
+        )
+        bd = bcap - st.bmat.keys.shape[0]
+        bkeys = jnp.pad(st.bmat.keys, (0, bd), constant_values=KEY_MAX)
+        bmat = BMATState(
+            keys=bkeys,
+            vals=jnp.pad(st.bmat.vals, (0, bd)),
+            fences=_make_fences(bkeys, self.cfg.bmat_fanout),
+            size=st.bmat.size,
+        )
+        return UpLIFState(slots=slots, model=model, bmat=bmat,
+                          counters=st.counters)
+
+    def _write_shard(self, s: int, sh: UpLIF) -> bool:
+        """Fast path for single-shard maintenance: when the rebuilt shard
+        still fits the current stacked shapes (the common case — shapes are
+        quantized and monotone), write its padded row into the stacked
+        pytree in place instead of restacking all S shards. Returns False
+        when a dimension outgrew the stack and the caller must restack."""
+        cap = int(self.state.slots.keys.shape[1])
+        bcap = int(self.state.bmat.keys.shape[1])
+        n_knots = int(self.state.model.spline_keys.shape[1])
+        fits = (
+            sh.capacity <= cap
+            and sh.bmat.capacity <= bcap
+            and int(sh.rs_model.spline_keys.shape[0]) <= n_knots
+            and sh.rs_static.n_search_iters <= self.rs_iters
+        )
+        if not fits:
+            return False
+        row = self._pad_shell(sh, cap, bcap, n_knots)
+        self.state = jax.tree_util.tree_map(
+            lambda st, r: st.at[s].set(r), self.state, row
+        )
+        self._meta[s] = _ShardMeta(
+            rs_static=sh.rs_static,
+            gmm=sh.gmm,
+            alpha=sh.alpha,
+            reservoir=sh._reservoir,
+        )
+        return True
 
     def _unstack_shell(self, s: int) -> UpLIF:
         """Materialize shard ``s`` as a regular UpLIF shell (shared arrays)."""
@@ -376,11 +447,42 @@ class ShardedUpLIF:
         )
 
     # -- tuning hooks (Section 4.2, applied per shard) -------------------------
-    def retrain_full(self):
+    def retrain_full(self, gmm: Optional[GMMState] = None):
         shells = [self._unstack_shell(s) for s in range(self.n_shards)]
         for sh in shells:
-            sh.retrain_full()
+            sh.retrain_full(gmm)
         self._restack(shells)
+        self.n_retrains += 1
+
+    def retrain_shard(self, s: int, gmm: Optional[GMMState] = None):
+        """Targeted tuning action: full retrain of ONE shard — absorb its
+        delta buffer, drop its tombstones, re-nullify with ``gmm`` (the
+        tuning subsystem's D_update forecast) or the shard reservoir refit.
+        Orders of magnitude cheaper than ``retrain_full`` when only one
+        shard's buffer is hot, which is the common case under skew: the
+        rebuilt shard usually still fits the stacked shapes, so the update
+        is one padded row write — no restack, no new jit variants. The Eq. 7
+        gap budget α is fitted to the capacity the stacked state already
+        has (floored at 0.05): gaps are a tunable dial, reallocation +
+        recompilation is a hard stall, so the retrain trades the former for
+        the latter. When the shard outgrows even a low-α layout the arrays
+        genuinely grow — that is the regime where the controller's
+        split-shard action pays instead."""
+        assert 0 <= s < self.n_shards
+        shell = self._unstack_shell(s)
+        n_live = int(shell.size)
+        cap_now = int(self.state.slots.keys.shape[1])
+        slack = max(64, self.cfg.window) + self.cfg.window
+        # 5% safety for round-mode quantization jitter in the gap counts
+        alpha_fit = (cap_now - slack) / max(n_live, 1) - 1.05
+        alpha = min(self.cfg.alpha_target, max(alpha_fit, 0.05))
+        shell.retrain_full(gmm, alpha_target=alpha, gap_quantize="round")
+        if not self._write_shard(s, shell):
+            shells = [
+                shell if i == s else self._unstack_shell(i)
+                for i in range(self.n_shards)
+            ]
+            self._restack(shells)
         self.n_retrains += 1
 
     def retrain_subset(self, quantiles: int = 16) -> int:
@@ -395,6 +497,85 @@ class ShardedUpLIF:
 
     def switch_bmat_type(self):
         self.bmat_kind = BPMAT if self.bmat_kind == RBMAT else RBMAT
+
+    # -- structural maintenance (tuning-subsystem entry points) ----------------
+    def split_shard(self, s: int) -> bool:
+        """Split shard ``s`` at its median live key into two shards.
+
+        The keyspace partition stays a range partition (one new boundary at
+        the median key), so routing, range-query shard order and the global
+        rank arithmetic all keep working unchanged. Returns False when the
+        shard is too small to split (fewer than 2 live keys)."""
+        assert 0 <= s < self.n_shards
+        shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+        keys, vals = shells[s].extract_live()
+        mid = len(keys) // 2
+        if mid == 0 or keys[mid] == keys[0]:
+            return False
+        cut = int(keys[mid])  # first key of the right half == new boundary
+        gmm = shells[s].gmm
+        left = UpLIF(keys[:mid], vals[:mid], self.cfg, gmm=gmm)
+        right = UpLIF(keys[mid:], vals[mid:], self.cfg, gmm=gmm)
+        res = shells[s]._reservoir
+        left._reservoir = res[res < cut]
+        right._reservoir = res[res >= cut]
+        self.boundaries = np.insert(self.boundaries, s, cut)
+        self._jbounds = jnp.asarray(self.boundaries)
+        self.n_shards += 1
+        self.n_splits += 1
+        self._restack(shells[:s] + [left, right] + shells[s + 1:])
+        return True
+
+    def merge_shards(self, s: int) -> bool:
+        """Merge shard ``s`` with its right neighbor ``s + 1`` (adjacent
+        shards own adjacent key ranges, so a concat preserves sortedness).
+        Returns False when there is no right neighbor or the merged shard
+        would be empty."""
+        if self.n_shards < 2 or not (0 <= s < self.n_shards - 1):
+            return False
+        shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+        k1, v1 = shells[s].extract_live()
+        k2, v2 = shells[s + 1].extract_live()
+        keys = np.concatenate([k1, k2])
+        vals = np.concatenate([v1, v2])
+        if len(keys) == 0:
+            return False
+        merged = UpLIF(keys, vals, self.cfg, gmm=shells[s].gmm)
+        res = np.concatenate(
+            [shells[s]._reservoir, shells[s + 1]._reservoir]
+        )
+        if len(res) > self.cfg.reservoir:
+            res = self._rng.choice(res, self.cfg.reservoir, replace=False)
+        merged._reservoir = res
+        self.boundaries = np.delete(self.boundaries, s)
+        self._jbounds = jnp.asarray(self.boundaries)
+        self.n_shards -= 1
+        self.n_merges += 1
+        self._restack(shells[:s] + [merged] + shells[s + 2:])
+        return True
+
+    def presize_bmat(self, per_shard_capacity: int) -> bool:
+        """Proactive delta-buffer growth (forecast-driven): raise every
+        shard's BMAT capacity to at least ``per_shard_capacity`` NOW, so a
+        predicted insert burst neither reallocates nor recompiles on the
+        hot path. Growth only — capacities never shrink mid-run."""
+        bcap = int(self.state.bmat.keys.shape[1])
+        need = int(per_shard_capacity)
+        if need <= bcap:
+            return False
+        new_cap = 1 << max((need - 1).bit_length(), 0)
+        keys, vals, fences = _vgrow_bmat(
+            self.state.bmat.keys,
+            self.state.bmat.vals,
+            fanout=self.cfg.bmat_fanout,
+            pad=new_cap - bcap,
+        )
+        self.state = self.state._replace(
+            bmat=BMATState(
+                keys=keys, vals=vals, fences=fences, size=self.state.bmat.size
+            )
+        )
+        return True
 
     # -- accounting ------------------------------------------------------------
     @property

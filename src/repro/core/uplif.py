@@ -124,17 +124,27 @@ class UpLIF:
         self._bulk_load(keys, vals, gmm)
 
     # -- construction --------------------------------------------------------
-    def _bulk_load(self, keys: np.ndarray, vals: np.ndarray, gmm: GMMState):
+    def _bulk_load(
+        self,
+        keys: np.ndarray,
+        vals: np.ndarray,
+        gmm: GMMState,
+        alpha_target: Optional[float] = None,
+        gap_quantize: str = "ceil",
+    ):
         cfg = self.cfg
         self.gmm = gmm
         res = nullify(
             keys,
             vals,
             gmm,
-            alpha_target=cfg.alpha_target,
+            alpha_target=(
+                cfg.alpha_target if alpha_target is None else alpha_target
+            ),
             d_max=cfg.d_max,
             tail_slack=max(64, cfg.window),
             align=cfg.window,  # fops grid windows require W-aligned capacity
+            quantize=gap_quantize,
         )
         self.slots = res.slots
         self.alpha = res.alpha
@@ -321,9 +331,10 @@ class UpLIF:
         return self.gmm
 
     # -- tuning actions (Section 4.2) ------------------------------------------
-    def retrain_full(self):
-        """Action: full retrain — flush BMAT, drop tombstones, re-nullify with
-        the refreshed D_update estimate, rebuild the spline."""
+    def extract_live(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All live (key, value) pairs — in-place + buffered, tombstones
+        dropped — sorted by key. The raw material of every structural
+        action (retrain, shard split/merge)."""
         sk = np.asarray(self.slots.keys)
         sv = np.asarray(self.slots.vals)
         so = np.asarray(self.slots.occ)
@@ -333,12 +344,32 @@ class UpLIF:
         keys = np.concatenate([ak, bk])
         vals = np.concatenate([av, bv])
         o = np.argsort(keys, kind="stable")
-        keys, vals = keys[o], vals[o]
+        return keys[o], vals[o]
+
+    def retrain_full(
+        self,
+        gmm: Optional[GMMState] = None,
+        alpha_target: Optional[float] = None,
+        gap_quantize: str = "ceil",
+    ):
+        """Action: full retrain — flush BMAT, drop tombstones, re-nullify with
+        the refreshed D_update estimate, rebuild the spline. ``gmm`` lets a
+        caller supply an external D_update forecast (the online tuning
+        subsystem's streaming estimate) instead of the reservoir refit, so
+        Eq. 6 gaps are sized for *predicted* — not just observed — inserts;
+        ``alpha_target`` overrides the Eq. 7 gap budget (the sharded router
+        fits it to available capacity so absorbs reuse compiled shapes)."""
+        keys, vals = self.extract_live()
         self.bmat = BMAT(
             self.bmat.tree_type, self.cfg.bmat_fanout,
             capacity=self.cfg.bmat_capacity,
         )
-        self._bulk_load(keys, vals, self.refreshed_gmm())
+        self._bulk_load(
+            keys, vals,
+            gmm if gmm is not None else self.refreshed_gmm(),
+            alpha_target=alpha_target,
+            gap_quantize=gap_quantize,
+        )
         self.n_retrains += 1
 
     def retrain_subset(self, quantiles: int = 16) -> int:

@@ -183,6 +183,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool, strategy: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # older jax wraps the per-device properties dict in a list
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
             from repro.launch.hlo_analysis import analyze_hlo
 

@@ -96,13 +96,18 @@ class HLOModule:
                 if cm:
                     self.comps[cur]["consts"].append(int(cm.group(1)))
             if op == "dot":
-                lhs_m = re.match(r"%([\w\.\-]+)", rest)
+                # the lhs operand is either a bare `%name` or (newer XLA
+                # text) `f32[8,64]{1,0} %name` with the shape inline
+                lhs_m = re.match(
+                    r"(?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+)?%([\w\.\-]+)",
+                    rest,
+                )
                 cd_m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
                 if lhs_m and cd_m:
                     cdims = [int(x) for x in cd_m.group(1).split(",") if x]
-                    self.comps[cur]["dots"].append(
-                        (out_shape, lhs_m.group(1), cdims)
-                    )
+                    # prefer the inline shape; fall back to a name lookup
+                    lhs = lhs_m.group(1) or lhs_m.group(2)
+                    self.comps[cur]["dots"].append((out_shape, lhs, cdims))
             elif op == "convolution":
                 self.comps[cur]["convs"].append(line)
             elif op == "while":
@@ -127,14 +132,15 @@ class HLOModule:
     def _dot_flops_local(self, comp: str) -> float:
         total = 0.0
         c = self.comps[comp]
-        for out_shape, lhs_name, cdims in c["dots"]:
+        for out_shape, lhs, cdims in c["dots"]:
             elems = _shape_elems(out_shape)
             if not elems:
                 continue
             out_n = 1
             for d in elems[0][1]:
                 out_n *= d
-            lhs_shape = c["shapes"].get(lhs_name, "")
+            # `lhs` is an inline shape string or an instruction name
+            lhs_shape = lhs if "[" in lhs else c["shapes"].get(lhs, "")
             lelems = _shape_elems(lhs_shape)
             k = 1
             if lelems:

@@ -19,6 +19,19 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes):
+    """jax.make_mesh across API generations: ``axis_types`` (and the
+    ``jax.sharding.AxisType`` enum backing it) only exist in newer JAX; every
+    axis here is Auto, which is also the legacy default, so omitting the
+    argument on older versions builds the identical mesh."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -27,9 +40,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_mesh_for_devices(n_devices: int, model_parallel: int = 1):
@@ -37,7 +48,4 @@ def make_mesh_for_devices(n_devices: int, model_parallel: int = 1):
     elastic-rescale checkpoint tests and the CPU examples)."""
     assert n_devices % model_parallel == 0
     shape = (n_devices // model_parallel, model_parallel)
-    return jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _mesh(shape, ("data", "model"))

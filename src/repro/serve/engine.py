@@ -10,6 +10,7 @@ run batched once per admission wave.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -19,6 +20,7 @@ import numpy as np
 from repro.core.sharded import ShardedUpLIF
 from repro.core.uplif import UpLIFConfig
 from repro.models.transformer import decode_step, forward_lm, init_cache
+from repro.tuning import SelfTuner
 
 _MASK = (1 << 52) - 1
 _P = 1000003
@@ -46,7 +48,12 @@ class PrefixCacheIndex:
     shards balanced from the first admission on.
     """
 
-    def __init__(self, capacity_hint: int = 4096, n_shards: Optional[int] = None):
+    def __init__(
+        self,
+        capacity_hint: int = 4096,
+        n_shards: Optional[int] = None,
+        tuner: Optional[SelfTuner] = None,
+    ):
         self.capacity_hint = int(capacity_hint)
         if n_shards is None:
             n_shards = max(1, min(8, self.capacity_hint // 2048))
@@ -65,6 +72,24 @@ class PrefixCacheIndex:
         self._next_slot = 0
         self.hits = 0
         self.misses = 0
+        # online self-tuning hook: the tuner observes every fingerprint
+        # insert and runs budgeted maintenance when maintain() is called
+        # between waves. Maintenance preserves the fingerprint -> slot
+        # mapping, so match() results never change — only latency/memory.
+        self.tuner = tuner.attach(self.index) if tuner is not None else None
+        self._wave_ops = 0
+        self._wave_t0 = time.perf_counter()
+
+    def maintain(self):
+        """End-of-wave hook: report measured wave throughput to the tuner
+        and let it spend its maintenance budget. No-op without a tuner."""
+        if self.tuner is None:
+            return None
+        now = time.perf_counter()
+        rec = self.tuner.after_wave(self._wave_ops, now - self._wave_t0)
+        self._wave_ops = 0
+        self._wave_t0 = time.perf_counter()
+        return rec
 
     def match(self, fps: np.ndarray) -> Tuple[int, int]:
         """Longest cached prefix whose slot is still resident: returns
@@ -73,6 +98,7 @@ class PrefixCacheIndex:
         actually reuse, so hits + misses stays consistent with evictions."""
         if len(fps) == 0:
             return -1, 0
+        self._wave_ops += len(fps)
         found, slot = self.index.lookup(fps)
         valid = found & (slot >= 0)
         for i in reversed(np.nonzero(valid)[0]):
@@ -88,12 +114,16 @@ class PrefixCacheIndex:
         self._next_slot += 1
         self.slots[sid] = state
         if len(fps):
+            self._wave_ops += len(fps)
             self.index.insert(fps, np.full(len(fps), sid, dtype=np.int64))
+            if self.tuner is not None:
+                self.tuner.observe_inserts(fps)
         return sid
 
     def evict(self, sid: int, fps: np.ndarray):
         self.slots.pop(sid, None)
         if len(fps):
+            self._wave_ops += len(fps)
             self.index.delete(fps)
 
     def memory_bytes(self) -> int:
@@ -112,12 +142,23 @@ class ServeEngine:
     """Continuous-batching decode engine (CPU-scale; the sharded production
     path reuses the same decode_step with the dry-run's shardings)."""
 
-    def __init__(self, cfg, params, max_batch: int = 8, max_len: int = 512):
+    _DEFAULT_TUNER = object()  # sentinel: "make one" vs an explicit None
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        max_batch: int = 8,
+        max_len: int = 512,
+        tuner: Any = _DEFAULT_TUNER,
+    ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.prefix_index = PrefixCacheIndex()
+        if tuner is self._DEFAULT_TUNER:
+            tuner = SelfTuner()  # self-tuning on unless explicitly disabled
+        self.prefix_index = PrefixCacheIndex(tuner=tuner)
         self._decode = jax.jit(
             lambda p, tok, cache: decode_step(p, cfg, tok, cache)
         )
@@ -158,4 +199,6 @@ class ServeEngine:
                 logits, cache = self._decode(self.params, tok, cache)
                 tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
             req.out = out
+        # background maintenance runs between waves, never inside one
+        self.prefix_index.maintain()
         return requests

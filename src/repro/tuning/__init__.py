@@ -1,0 +1,127 @@
+"""Online self-tuning subsystem (ISSUE 2 tentpole; DESIGN.md §7).
+
+Closes the paper's adaptive loop over the functional sharded core:
+
+  telemetry  — per-shard live measures reduced on-device from the stacked
+               ``UpLIFState`` (one tiny transfer per snapshot);
+  forecast   — streaming-EM GMM over the observed insert stream (D_update,
+               Section 3.4) driving delta-buffer presizing, Eq. 6 gap
+               sizing at retrain, and split/rebalance triggers;
+  controller — per-shard Q-learning (Algorithm 1) with the extended masked
+               action space keep / retrain-shard / switch-BMAT /
+               split-shard / merge-shards;
+  scheduler  — budgeted background loop executing controller actions
+               between request waves (maintenance never alters lookup
+               results, only latency/memory).
+
+``SelfTuner`` bundles the four into the one object serving code attaches:
+
+    tuner = SelfTuner()
+    index = PrefixCacheIndex(capacity_hint=1 << 16, tuner=tuner)
+    ...  # tuner.observe_inserts / tuner.after_wave run inside the engine
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.sharded import ShardedUpLIF
+from repro.core.types import KEY_MAX
+from repro.tuning.controller import (  # noqa: F401
+    A_KEEP,
+    A_MERGE_SHARDS,
+    A_RETRAIN_SHARD,
+    A_SPLIT_SHARD,
+    A_SWITCH_BMAT,
+    ACTION_NAMES,
+    ACTIONS,
+    ControllerConfig,
+    ShardTuningController,
+)
+from repro.tuning.forecast import ForecastConfig, UpdateForecaster  # noqa: F401
+from repro.tuning.scheduler import MaintenanceScheduler, SchedulerConfig  # noqa: F401
+from repro.tuning.telemetry import (  # noqa: F401
+    Telemetry,
+    TelemetryConfig,
+    TelemetrySnapshot,
+    shard_signals,
+)
+
+
+@dataclasses.dataclass
+class TunerConfig:
+    telemetry: TelemetryConfig = dataclasses.field(
+        default_factory=TelemetryConfig
+    )
+    forecast: ForecastConfig = dataclasses.field(
+        default_factory=ForecastConfig
+    )
+    controller: ControllerConfig = dataclasses.field(
+        default_factory=ControllerConfig
+    )
+    scheduler: SchedulerConfig = dataclasses.field(
+        default_factory=SchedulerConfig
+    )
+
+
+class SelfTuner:
+    """Telemetry + forecast + controller + scheduler as one attachable unit."""
+
+    def __init__(self, config: TunerConfig = TunerConfig()):
+        self.cfg = config
+        self.telemetry = Telemetry(config.telemetry)
+        self.controller = ShardTuningController(config.controller)
+        self.forecaster: Optional[UpdateForecaster] = None
+        self.scheduler: Optional[MaintenanceScheduler] = None
+        self.index: Optional[ShardedUpLIF] = None
+
+    def attach(self, index: ShardedUpLIF) -> "SelfTuner":
+        """Bind to a router; the forecast domain comes from its live keys."""
+        keys = np.asarray(index.state.slots.keys).ravel()
+        keys = keys[keys < KEY_MAX]
+        lo = float(keys.min()) if len(keys) else 0.0
+        hi = float(keys.max()) if len(keys) else 1.0
+        self.forecaster = UpdateForecaster(lo, hi, self.cfg.forecast)
+        self.scheduler = MaintenanceScheduler(
+            self.controller, self.telemetry, self.forecaster,
+            self.cfg.scheduler,
+        )
+        self.index = index
+        return self
+
+    # -- the two calls serving code makes ------------------------------------
+    def observe_inserts(self, keys: np.ndarray):
+        """Feed observed insert keys to the D_update forecaster."""
+        if self.forecaster is not None and len(keys):
+            self.forecaster.observe(keys)
+            self.scheduler.observe_inserts(len(keys))
+
+    def after_wave(self, n_ops: int, seconds: float) -> Optional[dict]:
+        """Report a finished request wave; maybe run one maintenance step."""
+        if self.scheduler is None or self.index is None:
+            return None
+        return self.scheduler.on_wave(self.index, n_ops, seconds)
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> dict:
+        sched = self.scheduler
+        return {
+            "waves": self.telemetry.n_waves,
+            "throughput_ewma": self.telemetry.throughput_ewma,
+            "actions": {
+                name: int(n)
+                for name, n in zip(
+                    ACTION_NAMES, self.controller.action_counts
+                )
+            },
+            "q_states": len(self.controller.q),
+            "time_in_maintenance_s": (
+                sched.time_in_maintenance if sched else 0.0
+            ),
+            "forecast_obs": (
+                self.forecaster.n_obs if self.forecaster else 0
+            ),
+            "n_shards": self.index.n_shards if self.index else 0,
+        }

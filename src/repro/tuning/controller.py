@@ -1,0 +1,241 @@
+"""Per-shard self-tuning controller (Section 4.3, Algorithm 1 — online,
+ported off the legacy single-index shell onto the functional sharded core).
+
+Tabular Q-learning as in ``core/rl_agent.py``, with three changes the
+sharded router makes necessary and the paper's framing makes natural:
+
+  * the *state* is a per-shard discretization of the live telemetry
+    (delta-buffer fill, BMAT height, error scaling α, occupancy, forecast
+    heat, BMAT type, shard count) — the controller focuses each decision on
+    the shard the telemetry marks hottest;
+  * the *action space* extends the paper's {keep, retrain, switch-BMAT}
+    with the structural actions the router exposes: split-shard and
+    merge-shards (the self-scaling knobs);
+  * actions are *masked by the sharded state*: splitting past the shard
+    cap, splitting a tiny shard, merging the last shard, or retraining an
+    empty delta buffer are never representable choices, at train and at
+    exploit time alike.
+
+Rewards follow Algorithm 1: R = η·tput/max_tput − (1−η)·mem/max_mem with
+measured throughput/memory (telemetry EWMAs — the ops run between waves ARE
+the N operations of Algorithm 1 line 13). Cold-start exploitation falls
+back to a transparent threshold heuristic until the Q-table has seen the
+state; the heuristic is the bootstrap prior, the learned values override it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bmat import RBMAT
+from repro.core.sharded import ShardedUpLIF
+from repro.tuning.forecast import UpdateForecaster
+from repro.tuning.telemetry import TelemetrySnapshot
+
+# Extended per-shard action space (paper A1–A3 + structural A4/A5)
+A_KEEP = 0           # maintain current structure
+A_RETRAIN_SHARD = 1  # full retrain of the focus shard (absorbs its BMAT)
+A_SWITCH_BMAT = 2    # flip RBMAT <-> B+MAT (global: layout is shared)
+A_SPLIT_SHARD = 3    # split the focus shard at its median key
+A_MERGE_SHARDS = 4   # merge the coldest adjacent shard pair
+ACTIONS = (A_KEEP, A_RETRAIN_SHARD, A_SWITCH_BMAT, A_SPLIT_SHARD,
+           A_MERGE_SHARDS)
+ACTION_NAMES = ("keep", "retrain_shard", "switch_bmat", "split_shard",
+                "merge_shards")
+
+# state discretization edges
+_FILL_EDGES = np.array([0.05, 0.2, 0.5, 0.8])
+_HEIGHT_EDGES = np.array([4, 8, 12, 16, 20])
+_ERR_EDGES = np.array([0.5, 1.0, 2.0, 4.0])
+_OCC_EDGES = np.array([0.5, 0.75, 0.9])
+_HEAT_EDGES = np.array([0.5, 1.5, 3.0])     # forecast mass × S (1 = even)
+_SHARDS_EDGES = np.array([2, 4, 8, 16])
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    alpha: float = 0.8       # learning rate (paper sensitivity: high)
+    gamma: float = 0.2       # discount (paper sensitivity: low)
+    eta: float = 0.7         # reward throughput/memory weight (Section 5.1)
+    epsilon: float = 0.3
+    epsilon_decay: float = 0.95
+    epsilon_min: float = 0.05
+    max_shards: int = 16
+    min_split_keys: int = 8192   # a shard below this never splits
+    merge_max_keys: int = 8192   # adjacent pairs above this never merge
+    fill_retrain: float = 0.35   # heuristic: retrain past this buffer fill
+    heat_split: float = 2.0      # heuristic: split past this forecast heat
+    seed: int = 0
+
+
+class ShardTuningController:
+    """Q-learning over per-shard telemetry states with masked actions."""
+
+    def __init__(self, config: ControllerConfig = ControllerConfig()):
+        self.cfg = config
+        self.q: Dict[Tuple, np.ndarray] = {}
+        self.rng = np.random.default_rng(config.seed)
+        self.epsilon = config.epsilon
+        self._max_tput = 1e-9
+        self._max_mem = 1.0
+        self.action_counts = np.zeros(len(ACTIONS), dtype=np.int64)
+
+    # -- state ---------------------------------------------------------------
+    def focus_shard(self, snap: TelemetrySnapshot, heat: np.ndarray) -> int:
+        """The shard this decision is about: most urgent by buffer fill,
+        forecast heat as the tie-breaker (pressure that is coming)."""
+        # heat × S == 1 means "even share"; weigh predicted pressure a
+        # quarter as much as pressure already materialized in the buffer
+        urgency = snap.bmat_fill + 0.25 * heat * snap.n_shards
+        return int(np.argmax(urgency))
+
+    def encode(
+        self, snap: TelemetrySnapshot, s: int, heat: np.ndarray
+    ) -> Tuple[int, ...]:
+        """Discretized per-shard state (S1..S5 + fill/occupancy/heat/#shards)."""
+        return (
+            int(np.searchsorted(_FILL_EDGES, float(snap.bmat_fill[s]))),
+            int(np.searchsorted(_HEIGHT_EDGES, int(snap.bmat_height[s]))),
+            int(np.searchsorted(_ERR_EDGES, float(snap.alpha[s]))),
+            int(np.searchsorted(_OCC_EDGES, float(snap.occupancy[s]))),
+            int(np.searchsorted(_HEAT_EDGES, float(heat[s]) * snap.n_shards)),
+            0 if snap.bmat_type == RBMAT else 1,
+            int(np.searchsorted(_SHARDS_EDGES, snap.n_shards)),
+        )
+
+    def action_mask(self, snap: TelemetrySnapshot, s: int) -> np.ndarray:
+        """bool[|A|] — which actions the *sharded state* admits right now."""
+        mask = np.zeros(len(ACTIONS), dtype=bool)
+        mask[A_KEEP] = True
+        mask[A_RETRAIN_SHARD] = int(snap.bmat_size[s]) > 0
+        mask[A_SWITCH_BMAT] = True
+        mask[A_SPLIT_SHARD] = (
+            snap.n_shards < self.cfg.max_shards
+            and int(snap.n_keys[s] + snap.n_bmat_live[s])
+            >= self.cfg.min_split_keys
+        )
+        live = snap.n_keys + snap.n_bmat_live
+        pair_ok = (
+            snap.n_shards >= 2
+            and int((live[:-1] + live[1:]).min()) <= self.cfg.merge_max_keys
+        )
+        mask[A_MERGE_SHARDS] = pair_ok
+        return mask
+
+    @staticmethod
+    def coldest_pair(snap: TelemetrySnapshot) -> int:
+        """Index s of the adjacent pair (s, s+1) with the fewest live keys."""
+        live = snap.n_keys + snap.n_bmat_live
+        return int(np.argmin(live[:-1] + live[1:]))
+
+    # -- policy --------------------------------------------------------------
+    def _q_row(self, s: Tuple) -> np.ndarray:
+        if s not in self.q:
+            self.q[s] = np.zeros(len(ACTIONS))
+        return self.q[s]
+
+    @staticmethod
+    def _masked(row: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        out = np.full_like(row, -np.inf)
+        out[mask] = row[mask]
+        return out
+
+    def heuristic(
+        self,
+        snap: TelemetrySnapshot,
+        s: int,
+        heat: np.ndarray,
+        mask: np.ndarray,
+    ) -> int:
+        """Cold-start bootstrap policy for states the Q-table hasn't seen:
+        retrain when the focus shard's buffer is hot, split when the
+        forecast piles mass onto one near-full shard, else keep."""
+        if mask[A_RETRAIN_SHARD] and float(snap.bmat_fill[s]) >= self.cfg.fill_retrain:
+            return A_RETRAIN_SHARD
+        if (
+            mask[A_SPLIT_SHARD]
+            and float(heat[s]) * snap.n_shards >= self.cfg.heat_split
+            and float(snap.bmat_fill[s]) >= self.cfg.fill_retrain / 2
+        ):
+            return A_SPLIT_SHARD
+        return A_KEEP
+
+    def choose(
+        self,
+        state: Tuple,
+        mask: np.ndarray,
+        *,
+        explore: bool = True,
+        snap: Optional[TelemetrySnapshot] = None,
+        s: int = 0,
+        heat: Optional[np.ndarray] = None,
+    ) -> int:
+        allowed = np.flatnonzero(mask)
+        if explore and self.rng.random() < self.epsilon:
+            return int(self.rng.choice(allowed))
+        if state not in self.q:
+            if snap is not None and heat is not None:
+                return self.heuristic(snap, s, heat, mask)
+            return A_KEEP
+        return int(np.argmax(self._masked(self._q_row(state), mask)))
+
+    # -- learning (Algorithm 1 lines 14-19) ----------------------------------
+    def reward(self, throughput: float, memory: float) -> float:
+        self._max_tput = max(self._max_tput, throughput)
+        self._max_mem = max(self._max_mem, memory)
+        return (
+            self.cfg.eta * throughput / self._max_tput
+            - (1 - self.cfg.eta) * memory / self._max_mem
+        )
+
+    def update(
+        self,
+        state: Tuple,
+        a: int,
+        r: float,
+        state_next: Tuple,
+        mask_next: np.ndarray,
+    ):
+        row = self._q_row(state)
+        nxt = self._masked(self._q_row(state_next), mask_next)
+        best_next = float(np.max(nxt))
+        if not np.isfinite(best_next):
+            best_next = 0.0
+        row[a] = (1 - self.cfg.alpha) * row[a] + self.cfg.alpha * (
+            r + self.cfg.gamma * best_next
+        )
+        self.epsilon = max(
+            self.cfg.epsilon_min, self.epsilon * self.cfg.epsilon_decay
+        )
+
+    # -- actuation -----------------------------------------------------------
+    def apply_action(
+        self,
+        index: ShardedUpLIF,
+        snap: TelemetrySnapshot,
+        s: int,
+        a: int,
+        forecaster: Optional[UpdateForecaster] = None,
+    ) -> bool:
+        """tuneSystem(a_t) against the live router. Returns whether the
+        action actually changed structure (masked edge races return False
+        instead of raising — telemetry may be one wave stale)."""
+        self.action_counts[a] += 1
+        if a == A_RETRAIN_SHARD:
+            gmm = (
+                forecaster.gmm
+                if forecaster is not None and forecaster.ready
+                else None
+            )
+            index.retrain_shard(s, gmm=gmm)
+            return True
+        if a == A_SWITCH_BMAT:
+            index.switch_bmat_type()
+            return True
+        if a == A_SPLIT_SHARD:
+            return index.split_shard(s)
+        if a == A_MERGE_SHARDS:
+            return index.merge_shards(self.coldest_pair(snap))
+        return False

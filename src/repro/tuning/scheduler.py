@@ -1,0 +1,201 @@
+"""Budgeted background maintenance (DESIGN.md §7.4).
+
+The scheduler is the only component that *touches* the index: it runs
+between request waves, keeps a wall-clock token bucket (maintenance may use
+at most ``budget_fraction`` of serving time), and executes one controller
+action per decision point when the budget covers that action's learned cost
+estimate. Expensive actions therefore defer under load and catch up in
+quiet periods — maintenance follows traffic instead of fighting it.
+
+Every action it can execute preserves the index's key→value mapping by
+construction (retrain/split/merge re-home live entries, presize only pads
+inert capacity), so maintenance is invisible to lookups — the property
+tests in tests/test_tuning.py pin this. The reward loop closes one decision
+later: the throughput/memory EWMAs measured over the waves *after* an
+action are Algorithm 1's "run N operations" observation for that action.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sharded import ShardedUpLIF
+from repro.tuning.controller import (
+    A_KEEP,
+    A_RETRAIN_SHARD,
+    ACTION_NAMES,
+    ShardTuningController,
+)
+from repro.tuning.forecast import UpdateForecaster
+from repro.tuning.telemetry import Telemetry
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    budget_fraction: float = 0.25  # ceiling on maintenance share of wall time
+    decide_every: int = 4          # waves between controller decisions
+    presize_horizon: int = 16      # presize for this many waves of inserts
+    presize_margin: float = 1.5    # overshoot factor per presize jump
+    force_absorb_fill: float = 0.6  # capacity-debt guard (see on_wave)
+    explore: bool = True           # epsilon-greedy (False = pure exploit)
+    cost_ewma: float = 0.5         # action-cost estimate update weight
+    max_budget_s: float = 30.0     # token-bucket cap (bounds catch-up bursts)
+
+
+class MaintenanceScheduler:
+    """Executes controller actions between request waves, under budget."""
+
+    def __init__(
+        self,
+        controller: ShardTuningController,
+        telemetry: Telemetry,
+        forecaster: Optional[UpdateForecaster] = None,
+        config: SchedulerConfig = SchedulerConfig(),
+    ):
+        self.controller = controller
+        self.telemetry = telemetry
+        self.forecaster = forecaster
+        self.cfg = config
+        self._budget = 0.0
+        self._wave = 0
+        self._insert_ewma = 0.0
+        # (state, action, mask) awaiting its measured reward
+        self._pending: Optional[Tuple] = None
+        self._cost_est: Dict[int, float] = {}
+        self.time_in_maintenance = 0.0
+        self.actions_log: List[dict] = []
+
+    # -- bookkeeping ---------------------------------------------------------
+    def observe_inserts(self, n: int):
+        self._insert_ewma = 0.75 * self._insert_ewma + 0.25 * float(n)
+
+    def _estimated_cost(self, a: int) -> float:
+        return self._cost_est.get(a, 0.05)  # optimistic until measured
+
+    # -- the loop ------------------------------------------------------------
+    def on_wave(
+        self, index: ShardedUpLIF, n_ops: int, seconds: float
+    ) -> Optional[dict]:
+        """Report one finished request wave; maybe run one maintenance step.
+
+        Returns the action record when a decision was made, else None.
+        """
+        self.telemetry.observe_wave(n_ops, seconds)
+        self._budget = min(
+            self._budget + max(seconds, 0.0) * self.cfg.budget_fraction,
+            self.cfg.max_budget_s,
+        )
+        self._wave += 1
+        decide = self._wave % self.cfg.decide_every == 0
+
+        snap = self.telemetry.snapshot(index)
+        heat = (
+            self.forecaster.shard_mass(index.boundaries)
+            if self.forecaster is not None
+            else np.full(index.n_shards, 1.0 / index.n_shards)
+        )
+        s = self.controller.focus_shard(snap, heat)
+        state = self.controller.encode(snap, s, heat)
+        mask = self.controller.action_mask(snap, s)
+
+        # -- capacity guards: EVERY wave, ahead of the learned policy -------
+        # Forecast-driven proactive presize (cheap, not a learned action).
+        # Capacity serves the FORECAST HORIZON only: if the predicted
+        # insert stream wouldn't fit an *empty* buffer, jump once with
+        # margin — every presize changes the BMAT's jit shapes, so land
+        # above the need instead of chasing it in recompile-triggering
+        # increments. Two gates keep it honest: the pressure must be
+        # *predicted* (forecast need beyond capacity) AND *materializing*
+        # (the buffer is actually filling — inserts the gapped array
+        # absorbs in place need no buffer capacity, whatever the forecast
+        # says). Capacity already used is the absorb guard's business,
+        # never a reason to grow further.
+        t0 = time.perf_counter()
+        presized = False
+        bcap = int(index.state.bmat.keys.shape[1])
+        if self.forecaster is not None and self.forecaster.ready:
+            horizon = int(
+                self.cfg.presize_horizon * max(self._insert_ewma, 1.0)
+            )
+            need = int(
+                self.cfg.presize_margin
+                * self.forecaster.bmat_presize(index.boundaries, horizon)
+            )
+            if need > bcap and int(snap.bmat_size.max()) > bcap // 2:
+                presized = index.presize_bmat(need)
+                bcap = int(index.state.bmat.keys.shape[1])
+
+        # capacity-debt guard (analogous to LSM compaction-debt limits): a
+        # delta buffer about to overflow its capacity would force an
+        # organic reallocation — new jit shapes, mid-wave — so an absorb
+        # retrain is mandatory no matter what the policy prefers. It
+        # watches the FULLEST buffer, not the (heat-biased) focus shard —
+        # any shard can hit the debt limit. This also keeps learning
+        # safe: the controller explores within bounds the scheduler
+        # enforces.
+        hot = int(np.argmax(snap.bmat_size))
+        forced = (
+            int(snap.bmat_size[hot]) > 0
+            and float(snap.bmat_size[hot])
+            > self.cfg.force_absorb_fill * bcap
+        )
+
+        # close the reward loop for the previous learned action on the
+        # normal cadence (Algorithm 1 lines 13-17) — even when a forced
+        # absorb preempts this wave's choice, so the old action's reward
+        # window doesn't silently stretch over later maintenance stalls
+        if decide and self._pending is not None:
+            p_state, p_action, _ = self._pending
+            r = self.controller.reward(
+                snap.throughput_ewma, snap.memory_ewma
+            )
+            self.controller.update(p_state, p_action, r, state, mask)
+            self._pending = None
+
+        a, deferred = A_KEEP, False
+        s_apply = s
+        if forced:
+            a, s_apply = A_RETRAIN_SHARD, hot
+        elif decide:
+            a = self.controller.choose(
+                state, mask, explore=self.cfg.explore,
+                snap=snap, s=s, heat=heat,
+            )
+            if a != A_KEEP and self._estimated_cost(a) > self._budget:
+                a, deferred = A_KEEP, True  # can't afford it yet — defer
+        elif not presized:
+            return None
+
+        changed = self.controller.apply_action(
+            index, snap, s_apply, a, self.forecaster
+        )
+        dt = time.perf_counter() - t0
+        self.time_in_maintenance += dt
+        if a != A_KEEP or presized:
+            self._budget = max(self._budget - dt, 0.0)
+        if a != A_KEEP:
+            w = self.cfg.cost_ewma
+            old = self._cost_est.get(a, dt)
+            self._cost_est[a] = (1 - w) * old + w * dt
+        if decide and not forced and (self.cfg.explore or a != A_KEEP):
+            self._pending = (state, a, mask)
+
+        rec = {
+            "wave": self._wave,
+            "shard": s_apply,
+            "action": ACTION_NAMES[a],
+            "changed": bool(changed),
+            "deferred": deferred,
+            "forced": forced,
+            "presized": presized,
+            "cost_s": dt,
+            "budget_s": self._budget,
+            "throughput_ewma": snap.throughput_ewma,
+            "n_shards": snap.n_shards,
+            "bmat_fill_max": float(snap.bmat_fill.max()),
+        }
+        self.actions_log.append(rec)
+        return rec

@@ -111,7 +111,14 @@ def test_full_configs_param_counts():
 def test_moe_ragged_matches_dense():
     import dataclasses
 
-    cfg = smoke_config("qwen3-moe-30b-a3b")
+    # compare in f32 compute: with a capacity factor high enough that
+    # nothing drops the two dispatches are the SAME function, so the check
+    # can be tight. (In bf16 a one-ulp accumulation-order difference in an
+    # early layer is chaotically amplified by the later layers' attention —
+    # the old loose logits comparison flaked on ~1% of elements.)
+    cfg = dataclasses.replace(
+        smoke_config("qwen3-moe-30b-a3b"), compute_dtype="float32"
+    )
     cfg_r = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, dispatch="ragged",
                                      capacity_factor=8.0)
@@ -124,7 +131,5 @@ def test_moe_ragged_matches_dense():
     batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)}
     ld = np.asarray(forward_lm(params, cfg_d, batch, remat=False), np.float32)
     lr = np.asarray(forward_lm(params, cfg_r, batch, remat=False), np.float32)
-    # with a capacity factor high enough that nothing drops, both dispatches
-    # compute the same function (bf16 accumulation noise aside)
-    np.testing.assert_allclose(ld, lr, rtol=0.12, atol=0.12)
-    assert (ld.argmax(-1) == lr.argmax(-1)).mean() >= 0.9
+    np.testing.assert_allclose(ld, lr, rtol=1e-4, atol=1e-4)
+    assert (ld.argmax(-1) == lr.argmax(-1)).all()

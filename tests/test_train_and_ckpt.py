@@ -127,8 +127,9 @@ def test_elastic_restore_with_new_sharding(tmp_path):
     cfg, params, opt, *_ = _setup()
     d = str(tmp_path / "ck")
     ckpt.save(d, 1, params)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _mesh
+
+    mesh = _mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     sh = jax.tree_util.tree_map(
