@@ -1,12 +1,16 @@
-"""Online self-tuning under distribution shift (ISSUE 2 acceptance bench).
+"""Online self-tuning under distribution shift (ISSUE 2/3 acceptance bench).
 
 Reproduces the Section 5.3 regime end to end on the sharded router: a
 write-heavy workload whose insert stream SHIFTS mid-run from the bootstrap
-key range to a previously-unseen upper range. Three maintenance policies
+key range to a previously-unseen upper range. Four maintenance policies
 run the identical (deterministically seeded) op sequence:
 
-  tuned          — the tuning subsystem (telemetry → forecast → controller
-                   → scheduler) runs between waves with its default budget;
+  tuned          — the tuning subsystem with SYNC builds: plan/build/commit
+                   all run between waves on the serving path (the stall the
+                   paper's "no retraining stalls" claim is measured against);
+  tuned_async    — same planner, builds on the executor thread: the serving
+                   path pays only plan + commit (row write + op-log replay),
+                   the host rebuild overlaps the following waves;
   never_tune     — no maintenance: the delta buffer absorbs the shift
                    (grows, reallocates, recompiles, slows every op);
   always_retrain — full retrain on a fixed cadence, paying the whole-index
@@ -18,13 +22,22 @@ runs second reuse the first policy's compiled variants, which is exactly
 the cost axis the policies differ on. Reported throughput covers the FULL
 run: maintenance, reallocation and recompilation included.
 
-The comparison row reports both raw throughput and the paper's Section 4.3
-composite objective R = η·tput/max_tput − (1−η)·mem/max_mem (η = 0.7),
-which is the quantity the controller actually optimizes.
+Per-wave serving-path latency (lookup + insert + range scans + the
+between-wave tuner hook) is recorded per policy; the ``async_vs_sync`` row
+compares the post-warmup p50/p95 and checks final index contents are
+equivalent (identical lookup results over every key the run inserted —
+the delta-replay rebase must lose nothing). The comparison row also
+reports the paper's Section 4.3 composite objective R = η·tput/max_tput −
+(1−η)·mem/max_mem (η = 0.7), the quantity the controller optimizes.
+
+Each wave issues a few range scans and reports their latency through
+``tuner.observe_range`` — the telemetry signal that folds scan cost into
+the controller reward (ROADMAP "Range-heavy tuning rewards").
 """
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import os
 import subprocess
@@ -36,12 +49,14 @@ import numpy as np
 
 ETA = 0.7  # Section 5.1 reward weight
 
-POLICIES = ("tuned", "never_tune", "always_retrain")
+POLICIES = ("tuned", "tuned_async", "never_tune", "always_retrain")
+WARMUP_WAVES = 5       # excluded from latency percentiles (cold jit debt)
+RANGES_PER_WAVE = 2    # range scans issued (and timed) per wave
 
 
 def _workload(n_keys: int, waves: int, batch: int, seed: int):
-    """Deterministic wave list: (read_keys, insert_keys) tuples with the
-    insert stream shifting to the upper key range at waves//3."""
+    """Deterministic wave list: (read_keys, insert_keys, range_los) tuples
+    with the insert stream shifting to the upper key range at waves//3."""
     from repro.data import make_dataset
 
     keys = np.sort(make_dataset("wikits", n_keys, seed))
@@ -70,10 +85,23 @@ def _workload(n_keys: int, waves: int, batch: int, seed: int):
             if ip2 + n_w > len(upper):
                 ip2 = 0
         reads = rng.choice(known, batch - n_w)
+        scans = rng.choice(known, RANGES_PER_WAVE)
         if w % 8 == 0:
             known = np.concatenate([known, ins])
-        plan.append((reads, ins))
+        plan.append((reads, ins, scans))
     return init, plan, shift_at
+
+
+def _content_digest(idx, keys: np.ndarray) -> str:
+    """Order-independent digest of the index's view of ``keys`` (found
+    flags + values) — the cross-policy contents-equivalence check."""
+    keys = np.unique(keys)
+    h = hashlib.sha256()
+    for a in range(0, len(keys), 65536):
+        f, v = idx.lookup(keys[a : a + 65536])
+        h.update(f.astype(np.uint8).tobytes())
+        h.update(np.where(f, v, 0).astype(np.int64).tobytes())
+    return h.hexdigest()
 
 
 def _run_policy(
@@ -97,45 +125,65 @@ def _run_policy(
         init, init + 1, UpLIFConfig(batch_bucket=4096), n_shards=n_shards
     )
     tuner = None
-    if policy == "tuned":
+    if policy in ("tuned", "tuned_async"):
         tuner = SelfTuner(
             TunerConfig(
                 controller=ControllerConfig(seed=seed),
                 forecast=ForecastConfig(seed=seed),
-                scheduler=SchedulerConfig(),
+                scheduler=SchedulerConfig(
+                    async_build=(policy == "tuned_async")
+                ),
             )
         ).attach(idx)
     ops = 0
+    wave_s = []
     t0 = time.perf_counter()
-    for w, (reads, ins) in enumerate(plan):
+    for w, (reads, ins, scans) in enumerate(plan):
         w0 = time.perf_counter()
         idx.lookup(reads)
         idx.insert(ins, ins + 1)
+        r0 = time.perf_counter()
+        idx.range_query_batch(scans, scans + (1 << 24), max_out=256)
+        r1 = time.perf_counter()
         ops += len(reads) + len(ins)
         if tuner is not None:
             tuner.observe_inserts(ins)
+            tuner.observe_range(len(scans), r1 - r0)
             tuner.after_wave(
                 len(reads) + len(ins), time.perf_counter() - w0
             )
         elif policy == "always_retrain" and (w + 1) % retrain_every == 0:
             idx.retrain_full()
+        wave_s.append(time.perf_counter() - w0)
+    if tuner is not None:
+        tuner.drain()
     dt = time.perf_counter() - t0
     # correctness probe: every policy must agree on what it stored
-    probe_r, probe_i = plan[-1]
+    _, probe_i, _ = plan[-1]
     f, v = idx.lookup(probe_i)
     assert f.all() and np.array_equal(v, probe_i + 1), policy
-    return {
+    all_keys = np.concatenate([init] + [p[1] for p in plan])
+    lat = np.asarray(wave_s[WARMUP_WAVES:]) * 1e3
+    res = {
         "policy": policy,
         "ops_per_s": ops / dt,
         "seconds": dt,
+        "p50_wave_ms": float(np.percentile(lat, 50)),
+        "p95_wave_ms": float(np.percentile(lat, 95)),
+        "max_wave_ms": float(lat.max()),
+        "digest": _content_digest(idx, all_keys),
         "index_bytes": int(idx.index_bytes()),
         "n_shards": idx.n_shards,
         "n_retrains": idx.n_retrains,
         "n_splits": idx.n_splits,
         "n_merges": idx.n_merges,
+        "epoch": idx.epoch,
         "bmat_size": int(np.asarray(idx.state.bmat.size).sum()),
         "tuner": tuner.stats() if tuner else None,
     }
+    if tuner is not None:
+        tuner.close()
+    return res
 
 
 def _spawn_policy(policy: str, ns) -> dict:
@@ -194,6 +242,8 @@ def run(
                 "us_per_call": round(1e6 / res["ops_per_s"], 3),
                 "derived": (
                     f"{res['ops_per_s']/1e6:.4f} Mops/s, "
+                    f"p50={res['p50_wave_ms']:.1f}ms "
+                    f"p95={res['p95_wave_ms']:.1f}ms, "
                     f"{res['index_bytes']/2**20:.2f} MiB, "
                     f"R={res['objective']:.3f}, "
                     f"bmat={res['bmat_size']}, S={res['n_shards']}" + extra
@@ -224,6 +274,40 @@ def run(
             "tuned_objective": results["tuned"]["objective"],
             "best_fixed_objective": best_fixed,
             "tput_ratio": results["tuned"]["ops_per_s"] / best_fixed_tput,
+            "shift_at": shift_at,
+            "waves": waves,
+        }
+    )
+    # ISSUE 3 acceptance: the async pipeline must take the maintenance
+    # stall off the serving path (p50 wave latency strictly below sync)
+    # without changing what the index stores (digests over every key the
+    # run inserted must match exactly).
+    sync_r, async_r = results["tuned"], results["tuned_async"]
+    contents_equal = sync_r["digest"] == async_r["digest"]
+    rows.append(
+        {
+            "name": "async_vs_sync",
+            "us_per_call": "",
+            "derived": (
+                f"p50 {async_r['p50_wave_ms']:.1f}ms vs "
+                f"{sync_r['p50_wave_ms']:.1f}ms "
+                f"(x{sync_r['p50_wave_ms']/max(async_r['p50_wave_ms'],1e-9):.2f}), "
+                f"p95 {async_r['p95_wave_ms']:.1f}ms vs "
+                f"{sync_r['p95_wave_ms']:.1f}ms, "
+                f"contents_equal={contents_equal}, "
+                f"commits={async_r['tuner']['commits']}, "
+                f"conflicts={async_r['tuner']['conflicts']}"
+            ),
+            "sync_p50_wave_ms": sync_r["p50_wave_ms"],
+            "async_p50_wave_ms": async_r["p50_wave_ms"],
+            "sync_p95_wave_ms": sync_r["p95_wave_ms"],
+            "async_p95_wave_ms": async_r["p95_wave_ms"],
+            "async_p50_below_sync": (
+                async_r["p50_wave_ms"] < sync_r["p50_wave_ms"]
+            ),
+            "contents_equal": contents_equal,
+            "async_commits": async_r["tuner"]["commits"],
+            "async_conflicts": async_r["tuner"]["conflicts"],
             "shift_at": shift_at,
             "waves": waves,
         }

@@ -6,7 +6,11 @@ waves: the production serving loop of UpLIF (Figure 1b), millions of
 operations end to end.
 
   PYTHONPATH=src python examples/serve_index.py [--keys 1000000]
-      [--seconds 8] [--shards 4] [--no-tune]
+      [--seconds 8] [--shards 4] [--no-tune] [--async-build]
+
+``--async-build`` routes maintenance through the plan/build/commit
+pipeline: shard rebuilds run on the executor thread and land at wave
+boundaries, so the serving loop never stalls on a retrain.
 """
 import argparse
 import time
@@ -27,10 +31,14 @@ def main():
     ap.add_argument("--dataset", default="wikits")
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--no-tune", action="store_true")
+    ap.add_argument("--async-build", action="store_true")
     args = ap.parse_args()
 
+    mode = "OFF" if args.no_tune else (
+        "ON/async" if args.async_build else "ON/sync"
+    )
     print(f"== UpLIF serving driver: {args.keys:,} {args.dataset} keys, "
-          f"{args.shards} shards, tuning {'OFF' if args.no_tune else 'ON'} ==")
+          f"{args.shards} shards, tuning {mode} ==")
     keys = make_dataset(args.dataset, args.keys)
     runner = WorkloadRunner(keys, init_frac=0.5, batch=WAVE, seed=0)
     t0 = time.time()
@@ -40,7 +48,11 @@ def main():
     print(f"bulk load: {time.time()-t0:.2f}s ({len(runner.init_keys):,} keys, "
           f"index {index.index_bytes()/2**20:.2f} MiB)")
 
-    tuner = None if args.no_tune else SelfTuner().attach(index)
+    tuner = None
+    if not args.no_tune:
+        tuner = (
+            SelfTuner.overlapped() if args.async_build else SelfTuner()
+        ).attach(index)
     total_ops = 0
     t0 = time.time()
     for wname, wrate in WORKLOADS.items():
@@ -74,7 +86,9 @@ def main():
           f"{index.n_retrains} retrains, {index.n_splits} splits, "
           f"{index.n_merges} merges, final size {index.size:,} keys")
     if tuner is not None:
+        tuner.drain()
         print(f"tuner: {tuner.stats()}")
+        tuner.close()
 
 
 if __name__ == "__main__":

@@ -21,6 +21,15 @@ capacity, spline knots, BMAT capacity), which is what makes the leaf-wise
 stacking legal; padding obeys the fill-forward invariants so the padded
 tails are inert.
 
+State is **versioned** (DESIGN.md §8): an epoch counter marks structural
+revisions, ``snapshot()`` freezes an immutable view for background builds
+and starts an op-log, and ``commit(delta)`` lands a rebuilt shard with
+epoch validation + op-log replay (rebase-on-commit) + one atomic
+reference swap — the substrate of the async plan/build/commit pipeline in
+``repro/tuning``. Mutations are single-writer (the serving thread), but
+concurrent reader threads are safe: they grab (state, boundaries, static)
+as one consistent view under the swap lock.
+
 The public API mirrors ``UpLIF`` (lookup / insert / delete / range_query /
 range_query_batch / size / memory accounting / tuning hooks), so the
 serving engine and the benchmark harness can swap the router in directly.
@@ -29,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import List, Optional, Tuple
 
 import jax
@@ -83,6 +93,154 @@ class _ShardMeta:
     reservoir: np.ndarray
 
 
+# --------------------------------------------------------------------------
+# Versioned state: plan/build/commit support (DESIGN.md §8).
+#
+# ``RouterSnapshot`` freezes everything a background build needs: the stacked
+# pytree (jax arrays are immutable, so holding the reference IS the freeze),
+# a copy of the boundaries and of the per-shard host metadata. ``StateDelta``
+# is the build's output — rebuilt shard shell(s) plus the key interval they
+# own — and ``ShardedUpLIF.commit`` applies it against the LIVE router:
+# epoch validation, row write / restack, replay of the op-log that
+# accumulated while the build ran (rebase-on-commit), one atomic swap.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterSnapshot:
+    """Immutable view of a router at one epoch; builds read ONLY this."""
+
+    epoch: int
+    state: UpLIFState
+    boundaries: np.ndarray
+    meta: Tuple[_ShardMeta, ...]
+    n_shards: int
+    cfg: UpLIFConfig
+    bmat_kind: str
+    rs_iters: int
+
+    def shell(self, s: int) -> UpLIF:
+        """Materialize shard ``s`` of the snapshot as a host UpLIF shell.
+        The shell shares the snapshot's (immutable) arrays — mutating shell
+        ops build NEW arrays, so the live router is never touched."""
+        return _shell_from(
+            self.state, self.meta[s], self.cfg, self.bmat_kind, s
+        )
+
+    def shard_bounds(self, s: int) -> Tuple[int, int]:
+        """Key interval [lo, hi) owned by shard ``s`` under this snapshot."""
+        lo = int(self.boundaries[s - 1]) if s > 0 else 0
+        hi = (
+            int(self.boundaries[s])
+            if s < self.n_shards - 1
+            else int(KEY_MAX)
+        )
+        return lo, hi
+
+
+@dataclasses.dataclass
+class StateDelta:
+    """Result of one background build, ready for ``commit``.
+
+    ``kind`` is "retrain" (shells = [rebuilt shard]), "split" (shells =
+    [left, right], ``boundary`` = the new cut) or "merge" (shells =
+    [merged]; covers shards ``shard`` and ``shard + 1``). ``key_lo/key_hi``
+    bound the keyspace the shells own — commit replays exactly the logged
+    ops that route into that interval, because everything outside it still
+    lives in rows the delta does not replace."""
+
+    epoch: int
+    kind: str
+    shard: int
+    key_lo: int
+    key_hi: int
+    shells: Tuple[UpLIF, ...]
+    boundary: Optional[int] = None
+    build_seconds: float = 0.0
+
+
+def _shell_from(
+    state: UpLIFState, meta: _ShardMeta, cfg: UpLIFConfig,
+    bmat_kind: str, s: int,
+) -> UpLIF:
+    """Shard ``s`` of a stacked state as a regular UpLIF shell (shared,
+    immutable arrays — zero copy)."""
+    st: UpLIFState = jax.tree_util.tree_map(lambda x: x[s], state)
+    sh = object.__new__(UpLIF)
+    sh.cfg = cfg
+    sh.slots = st.slots
+    sh.rs_model = st.model
+    sh.rs_static = meta.rs_static
+    sh.gmm = meta.gmm
+    sh.alpha = meta.alpha
+    sh.bmat = BMAT(bmat_kind, cfg.bmat_fanout)
+    sh.bmat.state = st.bmat
+    sh._counters = st.counters
+    sh._reservoir = meta.reservoir
+    sh._rng = np.random.default_rng(s)
+    sh.n_lookups = 0
+    sh.n_retrains = 0
+    return sh
+
+
+def retrain_shell_fitted(
+    shell: UpLIF, cap_now: int, gmm: Optional[GMMState] = None
+):
+    """Capacity-fitted full retrain of one shard shell (§7.5): the Eq. 7
+    gap budget α is solved from the slot capacity the stacked state already
+    has (floored at 0.05) so the rebuilt shard reuses compiled shapes —
+    gaps are a tunable dial, reallocation + recompilation is a hard stall.
+    Shared by the live ``retrain_shard`` fast path and the background
+    build (tuning/executor.py), which must produce identical layouts."""
+    n_live = int(shell.size)
+    slack = max(64, shell.cfg.window) + shell.cfg.window
+    # 5% safety for round-mode quantization jitter in the gap counts
+    alpha_fit = (cap_now - slack) / max(n_live, 1) - 1.05
+    alpha = min(shell.cfg.alpha_target, max(alpha_fit, 0.05))
+    shell.retrain_full(gmm, alpha_target=alpha, gap_quantize="round")
+
+
+def split_point(keys: np.ndarray) -> Optional[int]:
+    """Live-key index a shard splits at, or None when the split is
+    degenerate (fewer than 2 live keys, or the median equals the first key
+    so the left half would be empty). The ONE definition both the live
+    ``split_shard`` and the background build consult — they must agree on
+    what is splittable or sync and async structure would diverge."""
+    mid = len(keys) // 2
+    if mid == 0 or keys[mid] == keys[0]:
+        return None
+    return mid
+
+
+def split_shells(
+    shell: UpLIF, keys: np.ndarray, vals: np.ndarray, mid: int,
+    cfg: UpLIFConfig,
+) -> Tuple[UpLIF, UpLIF]:
+    """Two fresh shells for a shard split at live-key index ``mid``; the
+    D_update reservoir partitions at the cut so both halves keep their
+    observed update history."""
+    cut = int(keys[mid])
+    left = UpLIF(keys[:mid], vals[:mid], cfg, gmm=shell.gmm)
+    right = UpLIF(keys[mid:], vals[mid:], cfg, gmm=shell.gmm)
+    res = shell._reservoir
+    left._reservoir = res[res < cut]
+    right._reservoir = res[res >= cut]
+    return left, right
+
+
+def merge_shells(
+    sh1: UpLIF, sh2: UpLIF, keys: np.ndarray, vals: np.ndarray,
+    cfg: UpLIFConfig, rng: np.random.Generator,
+) -> UpLIF:
+    """One fresh shell covering two adjacent shards' live entries."""
+    merged = UpLIF(keys, vals, cfg, gmm=sh1.gmm)
+    res = np.concatenate([sh1._reservoir, sh2._reservoir])
+    if len(res) > cfg.reservoir:
+        res = rng.choice(res, cfg.reservoir, replace=False)
+    merged._reservoir = res
+    return merged
+
+
 class ShardedUpLIF:
     """Keyspace router over S UpLIF shards stored as one stacked pytree."""
 
@@ -133,6 +291,21 @@ class ShardedUpLIF:
         self.n_splits = 0
         self.n_merges = 0
         self._rng = np.random.default_rng(0)
+        # -- versioned state (plan/build/commit; DESIGN.md §8) -------------
+        # epoch counts structural revisions (retrain/split/merge/switch/
+        # commit); a build carries the epoch of its snapshot and commit
+        # discards it on mismatch. The op-log records inserts/deletes that
+        # arrive while a build is in flight so commit can rebase them onto
+        # the rebuilt shard. The lock only guards the reference swaps (and
+        # readers' reference grabs): ops are still single-writer — only
+        # concurrent READERS are supported against a mutating router.
+        self.epoch = 0
+        self.n_commits = 0
+        self.n_discards = 0
+        self._lock = threading.RLock()
+        self._oplog: List[Tuple[str, np.ndarray, Optional[np.ndarray]]] = []
+        self._tracking = False
+        self._in_replay = False
         self._restack(shells)
 
     # -- stacking ------------------------------------------------------------
@@ -178,14 +351,10 @@ class ShardedUpLIF:
             else max(4 * knots_need, 512)
         )
         padded = [self._pad_shell(sh, cap, bcap, n_knots) for sh in shells]
-        self.state: UpLIFState = jax.tree_util.tree_map(
+        state: UpLIFState = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *padded
         )
-        self.rs_iters = max(
-            max(sh.rs_static.n_search_iters for sh in shells),
-            getattr(self, "rs_iters", 0),
-        )
-        self._meta = [
+        meta = [
             _ShardMeta(
                 rs_static=sh.rs_static,
                 gmm=sh.gmm,
@@ -194,6 +363,13 @@ class ShardedUpLIF:
             )
             for sh in shells
         ]
+        with self._lock:
+            self.state = state
+            self.rs_iters = max(
+                max(sh.rs_static.n_search_iters for sh in shells),
+                getattr(self, "rs_iters", 0),
+            )
+            self._meta = meta
         assert cap % W == 0
 
     def _pad_shell(
@@ -243,35 +419,24 @@ class ShardedUpLIF:
         if not fits:
             return False
         row = self._pad_shell(sh, cap, bcap, n_knots)
-        self.state = jax.tree_util.tree_map(
+        state = jax.tree_util.tree_map(
             lambda st, r: st.at[s].set(r), self.state, row
         )
-        self._meta[s] = _ShardMeta(
-            rs_static=sh.rs_static,
-            gmm=sh.gmm,
-            alpha=sh.alpha,
-            reservoir=sh._reservoir,
-        )
+        with self._lock:
+            self.state = state
+            self._meta[s] = _ShardMeta(
+                rs_static=sh.rs_static,
+                gmm=sh.gmm,
+                alpha=sh.alpha,
+                reservoir=sh._reservoir,
+            )
         return True
 
     def _unstack_shell(self, s: int) -> UpLIF:
         """Materialize shard ``s`` as a regular UpLIF shell (shared arrays)."""
-        st: UpLIFState = jax.tree_util.tree_map(lambda x: x[s], self.state)
-        sh = object.__new__(UpLIF)
-        sh.cfg = self.cfg
-        sh.slots = st.slots
-        sh.rs_model = st.model
-        sh.rs_static = self._meta[s].rs_static
-        sh.gmm = self._meta[s].gmm
-        sh.alpha = self._meta[s].alpha
-        sh.bmat = BMAT(self.bmat_kind, self.cfg.bmat_fanout)
-        sh.bmat.state = st.bmat
-        sh._counters = st.counters
-        sh._reservoir = self._meta[s].reservoir
-        sh._rng = np.random.default_rng(s)
-        sh.n_lookups = 0
-        sh.n_retrains = 0
-        return sh
+        return _shell_from(
+            self.state, self._meta[s], self.cfg, self.bmat_kind, s
+        )
 
     def _static(self) -> UpLIFStatic:
         return UpLIFStatic(
@@ -283,6 +448,17 @@ class ShardedUpLIF:
             bmat_kind=self.bmat_kind,
             locate=UpLIF.LOCATE,
         )
+
+    def _read_view(self):
+        """One consistent (state, boundaries, jbounds, static) quadruple.
+
+        Readers on other threads race the commit swap only at reference
+        granularity: grabbing all four under the swap lock guarantees the
+        static/boundary metadata matches the pytree generation, so a lookup
+        issued mid-commit runs entirely against either the old or the new
+        state — never a mix (the torn-read stress test pins this)."""
+        with self._lock:
+            return self.state, self.boundaries, self._jbounds, self._static()
 
     # -- routing ---------------------------------------------------------------
     def _route(self, keys: np.ndarray) -> np.ndarray:
@@ -331,7 +507,8 @@ class ShardedUpLIF:
     def lookup(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.int64)
         q, n = self._pad_route(queries)
-        f, v = fops.slookup(self.state, q, self._jbounds, static=self._static())
+        state, _, jb, static = self._read_view()
+        f, v = fops.slookup(state, q, jb, static=static)
         self.n_lookups += n
         return np.asarray(f)[:n], np.asarray(v)[:n]
 
@@ -342,20 +519,27 @@ class ShardedUpLIF:
         vals = np.asarray(vals, dtype=np.int64)
         if len(keys) == 0:
             return 0
-        self._observe_updates(keys)
+        if self._tracking and not self._in_replay:
+            self._oplog.append(("insert", keys.copy(), vals.copy()))
+        if not self._in_replay:
+            self._observe_updates(keys)
         q, n, vm = self._pad_route(keys, vals)
         self._ensure_bmat_capacity(int(q.shape[0]))
         state, res = fops.sinsert(
             self.state, q, vm, self._jbounds, static=self._static()
         )
-        self.state = state
+        with self._lock:
+            self.state = state
         return int(res.n_overflow)
 
     def delete(self, keys: np.ndarray) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.int64)
+        if self._tracking and not self._in_replay:
+            self._oplog.append(("delete", keys.copy(), None))
         q, n = self._pad_route(keys)
         state, hit = fops.sdelete(self.state, q, self._jbounds, static=self._static())
-        self.state = state
+        with self._lock:
+            self.state = state
         return np.asarray(hit)[:n]
 
     def range_query(self, lo: int, hi: int, max_out: int = 1024):
@@ -376,20 +560,22 @@ class ShardedUpLIF:
         lo = np.asarray(lo, dtype=np.int64)
         hi = np.asarray(hi, dtype=np.int64)
         n = len(lo)
-        edges = np.concatenate([[0], self.boundaries, [KEY_MAX]])
+        state, boundaries, _, static = self._read_view()
+        n_shards = len(boundaries) + 1
+        edges = np.concatenate([[0], boundaries, [KEY_MAX]])
         picks = [
             np.nonzero((hi >= edges[s]) & (lo < edges[s + 1]))[0]
-            for s in range(self.n_shards)
+            for s in range(n_shards)
         ]
         B = self._bucket(max(max((len(p) for p in picks), default=1), 1))
-        lo_m = np.full((self.n_shards, B), KEY_MAX, dtype=np.int64)
-        hi_m = np.zeros((self.n_shards, B), dtype=np.int64)
+        lo_m = np.full((n_shards, B), KEY_MAX, dtype=np.int64)
+        hi_m = np.zeros((n_shards, B), dtype=np.int64)
         for s, p in enumerate(picks):
             lo_m[s, : len(p)] = lo[p]
             hi_m[s, : len(p)] = hi[p]
         res = _vrange(
-            self.state, jnp.asarray(lo_m), jnp.asarray(hi_m),
-            static=self._static(), max_out=max_out,
+            state, jnp.asarray(lo_m), jnp.asarray(hi_m),
+            static=static, max_out=max_out,
         )
         ks = np.asarray(res.keys)
         vs = np.asarray(res.vals)
@@ -415,16 +601,18 @@ class ShardedUpLIF:
         """Global logical rank = shard-local rank + total live keys in the
         shards left of the owning shard."""
         queries = np.asarray(queries, dtype=np.int64)
+        state, boundaries, jb, static = self._read_view()
         # a preceding shard contributes its live in-place keys plus its FULL
         # BMAT entry count — the bias r(k) counts tombstones too, matching
         # the single-shard BMAT rank semantics
-        sizes = np.asarray(self.state.counters.n_keys) + np.asarray(
-            self.state.bmat.size, dtype=np.int64
+        sizes = np.asarray(state.counters.n_keys) + np.asarray(
+            state.bmat.size, dtype=np.int64
         )
         base = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         q, n = self._pad_route(queries)
-        rank = np.asarray(fops.srank(self.state, q, self._jbounds, static=self._static()))
-        return rank[:n] + base[self._route(queries)]
+        rank = np.asarray(fops.srank(state, q, jb, static=static))
+        sid = np.searchsorted(boundaries, queries, side="right")
+        return rank[:n] + base[sid]
 
     # -- capacity management ---------------------------------------------------
     def _ensure_bmat_capacity(self, incoming: int):
@@ -440,11 +628,118 @@ class ShardedUpLIF:
             fanout=self.cfg.bmat_fanout,
             pad=new_cap - bcap,
         )
-        self.state = self.state._replace(
-            bmat=BMATState(
-                keys=keys, vals=vals, fences=fences, size=self.state.bmat.size
+        with self._lock:
+            self.state = self.state._replace(
+                bmat=BMATState(
+                    keys=keys, vals=vals, fences=fences,
+                    size=self.state.bmat.size,
+                )
             )
-        )
+
+    # -- versioned-state protocol (plan/build/commit; DESIGN.md §8) ------------
+    def snapshot(self) -> RouterSnapshot:
+        """Freeze the current state for a background build and start the
+        op-log. One build in flight at a time: a second snapshot before
+        commit/discard would clobber the first build's rebase log."""
+        if self._tracking:
+            raise RuntimeError("a build is already in flight (op-log active)")
+        with self._lock:
+            self._oplog = []
+            self._tracking = True
+            return RouterSnapshot(
+                epoch=self.epoch,
+                state=self.state,
+                boundaries=self.boundaries.copy(),
+                meta=tuple(dataclasses.replace(m) for m in self._meta),
+                n_shards=self.n_shards,
+                cfg=self.cfg,
+                bmat_kind=self.bmat_kind,
+                rs_iters=self.rs_iters,
+            )
+
+    def discard_build(self):
+        """Drop the in-flight build's op-log (build failed or was abandoned)."""
+        self._oplog = []
+        self._tracking = False
+        self.n_discards += 1
+
+    def commit(self, delta: StateDelta) -> bool:
+        """Apply a finished build to the live router — the wave-boundary
+        atomic swap. Validates the epoch first: any structural revision
+        since the snapshot (another commit, a direct retrain/split/merge, a
+        BMAT-type switch) invalidates the delta's shard indexing, so the
+        build is discarded and the caller replans. On success the logged
+        inserts/deletes that routed into the rebuilt key interval are
+        replayed onto the new rows (rebase-on-commit) — ops outside the
+        interval already live in rows the delta didn't replace."""
+        if delta.epoch != self.epoch:
+            self.discard_build()
+            return False
+        log, self._oplog, self._tracking = self._oplog, [], False
+        # the whole apply + replay is one critical section: a reader that
+        # won the race between the row swap and the replay would see the
+        # rebuilt (snapshot-era) shard WITHOUT the ops logged since the
+        # snapshot — a read-your-writes violation, not just a torn read
+        with self._lock:
+            self._apply_delta(delta)
+            self._replay(log, delta.key_lo, delta.key_hi)
+            self.epoch += 1
+            self.n_commits += 1
+        return True
+
+    def _apply_delta(self, delta: StateDelta):
+        if delta.kind == "retrain":
+            sh = delta.shells[0]
+            if not self._write_shard(delta.shard, sh):
+                shells = [
+                    sh if i == delta.shard else self._unstack_shell(i)
+                    for i in range(self.n_shards)
+                ]
+                self._restack(shells)
+            self.n_retrains += 1
+        elif delta.kind == "split":
+            s = delta.shard
+            shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+            with self._lock:
+                self.boundaries = np.insert(
+                    self.boundaries, s, delta.boundary
+                )
+                self._jbounds = jnp.asarray(self.boundaries)
+                self.n_shards += 1
+                self.n_splits += 1
+                self._restack(
+                    shells[:s] + list(delta.shells) + shells[s + 1:]
+                )
+        elif delta.kind == "merge":
+            s = delta.shard
+            shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+            with self._lock:
+                self.boundaries = np.delete(self.boundaries, s)
+                self._jbounds = jnp.asarray(self.boundaries)
+                self.n_shards -= 1
+                self.n_merges += 1
+                self._restack(
+                    shells[:s] + list(delta.shells) + shells[s + 2:]
+                )
+        else:
+            raise ValueError(f"unknown delta kind: {delta.kind}")
+
+    def _replay(self, log, lo: int, hi: int):
+        """Re-apply logged ops that route into [lo, hi) in arrival order.
+        Replay must neither re-log (the log was consumed) nor re-feed the
+        D_update reservoirs (the keys were observed at first arrival)."""
+        self._in_replay = True
+        try:
+            for kind, keys, vals in log:
+                m = (keys >= lo) & (keys < hi)
+                if not m.any():
+                    continue
+                if kind == "insert":
+                    self.insert(keys[m], vals[m])
+                else:
+                    self.delete(keys[m])
+        finally:
+            self._in_replay = False
 
     # -- tuning hooks (Section 4.2, applied per shard) -------------------------
     def retrain_full(self, gmm: Optional[GMMState] = None):
@@ -453,6 +748,7 @@ class ShardedUpLIF:
             sh.retrain_full(gmm)
         self._restack(shells)
         self.n_retrains += 1
+        self.epoch += 1
 
     def retrain_shard(self, s: int, gmm: Optional[GMMState] = None):
         """Targeted tuning action: full retrain of ONE shard — absorb its
@@ -470,13 +766,9 @@ class ShardedUpLIF:
         split-shard action pays instead."""
         assert 0 <= s < self.n_shards
         shell = self._unstack_shell(s)
-        n_live = int(shell.size)
-        cap_now = int(self.state.slots.keys.shape[1])
-        slack = max(64, self.cfg.window) + self.cfg.window
-        # 5% safety for round-mode quantization jitter in the gap counts
-        alpha_fit = (cap_now - slack) / max(n_live, 1) - 1.05
-        alpha = min(self.cfg.alpha_target, max(alpha_fit, 0.05))
-        shell.retrain_full(gmm, alpha_target=alpha, gap_quantize="round")
+        retrain_shell_fitted(
+            shell, int(self.state.slots.keys.shape[1]), gmm=gmm
+        )
         if not self._write_shard(s, shell):
             shells = [
                 shell if i == s else self._unstack_shell(i)
@@ -484,6 +776,7 @@ class ShardedUpLIF:
             ]
             self._restack(shells)
         self.n_retrains += 1
+        self.epoch += 1
 
     def retrain_subset(self, quantiles: int = 16) -> int:
         # absorb on the shard with the largest delta buffer (cheapest win)
@@ -493,10 +786,13 @@ class ShardedUpLIF:
         absorbed = shells[worst].retrain_subset(quantiles)
         self._restack(shells)
         self.n_retrains += 1
+        self.epoch += 1
         return absorbed
 
     def switch_bmat_type(self):
-        self.bmat_kind = BPMAT if self.bmat_kind == RBMAT else RBMAT
+        with self._lock:
+            self.bmat_kind = BPMAT if self.bmat_kind == RBMAT else RBMAT
+            self.epoch += 1
 
     # -- structural maintenance (tuning-subsystem entry points) ----------------
     def split_shard(self, s: int) -> bool:
@@ -509,21 +805,18 @@ class ShardedUpLIF:
         assert 0 <= s < self.n_shards
         shells = [self._unstack_shell(i) for i in range(self.n_shards)]
         keys, vals = shells[s].extract_live()
-        mid = len(keys) // 2
-        if mid == 0 or keys[mid] == keys[0]:
+        mid = split_point(keys)
+        if mid is None:
             return False
         cut = int(keys[mid])  # first key of the right half == new boundary
-        gmm = shells[s].gmm
-        left = UpLIF(keys[:mid], vals[:mid], self.cfg, gmm=gmm)
-        right = UpLIF(keys[mid:], vals[mid:], self.cfg, gmm=gmm)
-        res = shells[s]._reservoir
-        left._reservoir = res[res < cut]
-        right._reservoir = res[res >= cut]
-        self.boundaries = np.insert(self.boundaries, s, cut)
-        self._jbounds = jnp.asarray(self.boundaries)
-        self.n_shards += 1
-        self.n_splits += 1
-        self._restack(shells[:s] + [left, right] + shells[s + 1:])
+        left, right = split_shells(shells[s], keys, vals, mid, self.cfg)
+        with self._lock:
+            self.boundaries = np.insert(self.boundaries, s, cut)
+            self._jbounds = jnp.asarray(self.boundaries)
+            self.n_shards += 1
+            self.n_splits += 1
+            self._restack(shells[:s] + [left, right] + shells[s + 1:])
+            self.epoch += 1
         return True
 
     def merge_shards(self, s: int) -> bool:
@@ -540,18 +833,15 @@ class ShardedUpLIF:
         vals = np.concatenate([v1, v2])
         if len(keys) == 0:
             return False
-        merged = UpLIF(keys, vals, self.cfg, gmm=shells[s].gmm)
-        res = np.concatenate(
-            [shells[s]._reservoir, shells[s + 1]._reservoir]
-        )
-        if len(res) > self.cfg.reservoir:
-            res = self._rng.choice(res, self.cfg.reservoir, replace=False)
-        merged._reservoir = res
-        self.boundaries = np.delete(self.boundaries, s)
-        self._jbounds = jnp.asarray(self.boundaries)
-        self.n_shards -= 1
-        self.n_merges += 1
-        self._restack(shells[:s] + [merged] + shells[s + 2:])
+        merged = merge_shells(shells[s], shells[s + 1], keys, vals,
+                              self.cfg, self._rng)
+        with self._lock:
+            self.boundaries = np.delete(self.boundaries, s)
+            self._jbounds = jnp.asarray(self.boundaries)
+            self.n_shards -= 1
+            self.n_merges += 1
+            self._restack(shells[:s] + [merged] + shells[s + 2:])
+            self.epoch += 1
         return True
 
     def presize_bmat(self, per_shard_capacity: int) -> bool:
@@ -570,11 +860,13 @@ class ShardedUpLIF:
             fanout=self.cfg.bmat_fanout,
             pad=new_cap - bcap,
         )
-        self.state = self.state._replace(
-            bmat=BMATState(
-                keys=keys, vals=vals, fences=fences, size=self.state.bmat.size
+        with self._lock:
+            self.state = self.state._replace(
+                bmat=BMATState(
+                    keys=keys, vals=vals, fences=fences,
+                    size=self.state.bmat.size,
+                )
             )
-        )
         return True
 
     # -- accounting ------------------------------------------------------------

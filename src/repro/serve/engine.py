@@ -73,16 +73,20 @@ class PrefixCacheIndex:
         self.hits = 0
         self.misses = 0
         # online self-tuning hook: the tuner observes every fingerprint
-        # insert and runs budgeted maintenance when maintain() is called
-        # between waves. Maintenance preserves the fingerprint -> slot
-        # mapping, so match() results never change — only latency/memory.
+        # insert and plans budgeted maintenance when maintain() is called
+        # between waves. With an async tuner the build phase overlaps the
+        # following serving waves and the rebuilt state lands at a later
+        # maintain() (the wave-boundary commit point). Maintenance
+        # preserves the fingerprint -> slot mapping either way, so match()
+        # results never change — only latency/memory.
         self.tuner = tuner.attach(self.index) if tuner is not None else None
         self._wave_ops = 0
         self._wave_t0 = time.perf_counter()
 
     def maintain(self):
-        """End-of-wave hook: report measured wave throughput to the tuner
-        and let it spend its maintenance budget. No-op without a tuner."""
+        """End-of-wave hook: report measured wave throughput to the tuner,
+        land any finished background builds, and let it plan the next
+        maintenance step. No-op without a tuner."""
         if self.tuner is None:
             return None
         now = time.perf_counter()
@@ -90,6 +94,13 @@ class PrefixCacheIndex:
         self._wave_ops = 0
         self._wave_t0 = time.perf_counter()
         return rec
+
+    def close(self):
+        """Land in-flight builds, persist learned Q-tables, stop the
+        executor thread. Idempotent."""
+        if self.tuner is not None:
+            self.tuner.drain()
+            self.tuner.close()
 
     def match(self, fps: np.ndarray) -> Tuple[int, int]:
         """Longest cached prefix whose slot is still resident: returns
@@ -151,17 +162,27 @@ class ServeEngine:
         max_batch: int = 8,
         max_len: int = 512,
         tuner: Any = _DEFAULT_TUNER,
+        async_maintenance: bool = True,
     ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         if tuner is self._DEFAULT_TUNER:
-            tuner = SelfTuner()  # self-tuning on unless explicitly disabled
+            # self-tuning on unless explicitly disabled; the engine defaults
+            # to the async pipeline so index rebuilds overlap decode waves —
+            # pass async_maintenance=False to get the stalling sync builds
+            # (the config switch bench_self_tuning measures)
+            tuner = (
+                SelfTuner.overlapped() if async_maintenance else SelfTuner()
+            )
         self.prefix_index = PrefixCacheIndex(tuner=tuner)
         self._decode = jax.jit(
             lambda p, tok, cache: decode_step(p, cfg, tok, cache)
         )
+
+    def close(self):
+        self.prefix_index.close()
 
     def _prefill(self, prompt: np.ndarray):
         """Run the prompt through decode steps to build a cache (simple

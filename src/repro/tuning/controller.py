@@ -16,22 +16,33 @@ sharded router makes necessary and the paper's framing makes natural:
     empty delta buffer are never representable choices, at train and at
     exploit time alike.
 
-Rewards follow Algorithm 1: R = η·tput/max_tput − (1−η)·mem/max_mem with
-measured throughput/memory (telemetry EWMAs — the ops run between waves ARE
-the N operations of Algorithm 1 line 13). Cold-start exploitation falls
-back to a transparent threshold heuristic until the Q-table has seen the
-state; the heuristic is the bootstrap prior, the learned values override it.
+Rewards follow Algorithm 1, extended with a range-scan term: R =
+η·tput/max_tput − (1−η)·mem/max_mem − η_r·range_lat/max_range_lat with
+measured throughput/memory/range-latency (telemetry EWMAs — the ops run
+between waves ARE the N operations of Algorithm 1 line 13). The scan term
+is what makes BMAT-type switches that favor scans (the paper's Fig. 4
+crossover) learnable online: a B+MAT's fenced layout answers the rank
+range [r(lo), r(hi)) with fewer dependent gathers, which only shows up in
+the reward if scan latency is in it. Cold-start exploitation falls back to
+a transparent threshold heuristic until the Q-table has seen the state;
+the heuristic is the bootstrap prior, the learned values override it.
+
+Q-tables persist per **workload signature** — (write rate, skew, shift),
+the paper's workload-class axes — through ``QTableStore``: a session saves
+its table under its measured signature and a new session warm-starts from
+the nearest stored signature (the paper's per-workload-class pre-training,
+made incremental).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+import json
+import os
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.bmat import RBMAT
-from repro.core.sharded import ShardedUpLIF
-from repro.tuning.forecast import UpdateForecaster
 from repro.tuning.telemetry import TelemetrySnapshot
 
 # Extended per-shard action space (paper A1–A3 + structural A4/A5)
@@ -59,6 +70,7 @@ class ControllerConfig:
     alpha: float = 0.8       # learning rate (paper sensitivity: high)
     gamma: float = 0.2       # discount (paper sensitivity: low)
     eta: float = 0.7         # reward throughput/memory weight (Section 5.1)
+    eta_range: float = 0.15  # range-scan latency penalty weight (0 = off)
     epsilon: float = 0.3
     epsilon_decay: float = 0.95
     epsilon_min: float = 0.05
@@ -80,6 +92,7 @@ class ShardTuningController:
         self.epsilon = config.epsilon
         self._max_tput = 1e-9
         self._max_mem = 1.0
+        self._max_range_lat = 0.0
         self.action_counts = np.zeros(len(ACTIONS), dtype=np.int64)
 
     # -- state ---------------------------------------------------------------
@@ -182,13 +195,27 @@ class ShardTuningController:
         return int(np.argmax(self._masked(self._q_row(state), mask)))
 
     # -- learning (Algorithm 1 lines 14-19) ----------------------------------
-    def reward(self, throughput: float, memory: float) -> float:
+    def reward(
+        self, throughput: float, memory: float, range_lat: float = 0.0
+    ) -> float:
+        """R = η·tput − (1−η)·mem − η_r·range_lat, each term normalized by
+        its running max. The scan term contributes nothing until the
+        serving loop actually reports range latencies (max stays 0), so
+        point-only workloads reproduce the paper's two-term reward. The
+        range normalizer DECAYS (~5%/reward) before ratcheting: the first
+        scan observation includes jit compilation, orders of magnitude
+        above steady state — a never-decaying max would pin every later
+        penalty near zero and deaden the term it exists for."""
         self._max_tput = max(self._max_tput, throughput)
         self._max_mem = max(self._max_mem, memory)
-        return (
+        self._max_range_lat = max(self._max_range_lat * 0.95, range_lat)
+        r = (
             self.cfg.eta * throughput / self._max_tput
             - (1 - self.cfg.eta) * memory / self._max_mem
         )
+        if self._max_range_lat > 0.0:
+            r -= self.cfg.eta_range * range_lat / self._max_range_lat
+        return r
 
     def update(
         self,
@@ -210,32 +237,84 @@ class ShardTuningController:
             self.cfg.epsilon_min, self.epsilon * self.cfg.epsilon_decay
         )
 
-    # -- actuation -----------------------------------------------------------
-    def apply_action(
-        self,
-        index: ShardedUpLIF,
-        snap: TelemetrySnapshot,
-        s: int,
-        a: int,
-        forecaster: Optional[UpdateForecaster] = None,
+    # -- persistence (paper's per-workload-class pre-training) ----------------
+    def export_q(self) -> dict:
+        """JSON-serializable view of the learned table."""
+        return {
+            ",".join(map(str, k)): [float(x) for x in v]
+            for k, v in self.q.items()
+        }
+
+    def import_q(self, table: dict, only_missing: bool = True):
+        """Warm-start from a stored table. ``only_missing`` keeps rows this
+        session already learned (its own measurements beat the prior)."""
+        for ks, row in table.items():
+            k = tuple(int(x) for x in ks.split(","))
+            if only_missing and k in self.q:
+                continue
+            self.q[k] = np.asarray(row, dtype=np.float64)
+
+
+class QTableStore:
+    """Q-tables keyed by workload signature (write-rate × skew × shift).
+
+    One JSON file holds every signature's table. ``nearest`` returns the
+    stored entry with the smallest L2 distance in signature space (each
+    axis log-compressed — a 2x write-rate difference matters equally at
+    0.1 and 0.4); a fresh session warm-starts from it and, at save time,
+    writes its own table under its own measured signature. Corrupt or
+    unreadable stores degrade to empty (pre-training is an accelerant,
+    never a dependency)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._entries: list = []
+        try:
+            with open(path) as fh:
+                self._entries = json.load(fh)["entries"]
+        except (OSError, ValueError, KeyError):
+            self._entries = []
+
+    @staticmethod
+    def _dist(a: Sequence[float], b: Sequence[float]) -> float:
+        av = np.log1p(np.asarray(a, dtype=np.float64))
+        bv = np.log1p(np.asarray(b, dtype=np.float64))
+        return float(np.sqrt(((av - bv) ** 2).sum()))
+
+    def nearest(self, signature: Sequence[float]) -> Optional[dict]:
+        if not self._entries:
+            return None
+        return min(
+            self._entries,
+            key=lambda e: self._dist(e["signature"], signature),
+        )
+
+    def warm_start(
+        self, controller: ShardTuningController, signature: Sequence[float]
     ) -> bool:
-        """tuneSystem(a_t) against the live router. Returns whether the
-        action actually changed structure (masked edge races return False
-        instead of raising — telemetry may be one wave stale)."""
-        self.action_counts[a] += 1
-        if a == A_RETRAIN_SHARD:
-            gmm = (
-                forecaster.gmm
-                if forecaster is not None and forecaster.ready
-                else None
-            )
-            index.retrain_shard(s, gmm=gmm)
-            return True
-        if a == A_SWITCH_BMAT:
-            index.switch_bmat_type()
-            return True
-        if a == A_SPLIT_SHARD:
-            return index.split_shard(s)
-        if a == A_MERGE_SHARDS:
-            return index.merge_shards(self.coldest_pair(snap))
-        return False
+        """Load the nearest stored table into the controller's empty rows."""
+        entry = self.nearest(signature)
+        if entry is None:
+            return False
+        controller.import_q(entry["q"], only_missing=True)
+        return True
+
+    def save(
+        self, signature: Sequence[float], controller: ShardTuningController
+    ):
+        """Insert-or-replace this signature's entry and persist the store.
+        Signatures closer than ~5% on every axis collapse into one entry
+        (replaced by the newer table — it subsumes the warm-start)."""
+        sig = [float(x) for x in signature]
+        self._entries = [
+            e for e in self._entries
+            if self._dist(e["signature"], sig) > 0.05
+        ]
+        self._entries.append({"signature": sig, "q": controller.export_q()})
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"entries": self._entries}, fh)
+        os.replace(tmp, self.path)

@@ -1,0 +1,217 @@
+"""Background maintenance executor (DESIGN.md §8.2).
+
+The middle phase of the plan/build/commit pipeline: ``build`` turns one
+declarative ``MaintenancePlan`` into a ``StateDelta`` by running the
+host-side unstack/retrain/restack machinery against an immutable
+``RouterSnapshot`` — it never touches the live router's arrays, so it can
+run anywhere. ``MaintenanceExecutor`` runs it on a daemon worker thread:
+the scheduler submits (plan, snapshot) pairs after a decision, serving
+waves continue on the main thread, and finished deltas are collected with
+``poll()`` at the next wave boundary, where the scheduler commits them.
+
+Why a thread and not a process: builds are dominated by numpy sorts/
+concatenations and XLA executions, both of which release the GIL, so one
+worker overlaps with serving on a second core without serializing the hot
+path; and the delta must share the live process's jax arrays for the
+zero-copy commit. Exactly one worker: deltas commit in submission order,
+and the router's op-log supports a single in-flight build.
+
+Sync mode uses the *same* ``build`` function inline (scheduler calls
+build + commit back to back with an empty op-log), so the two modes differ
+only in where the build phase runs — never in what it produces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.sharded import (
+    RouterSnapshot,
+    StateDelta,
+    merge_shells,
+    retrain_shell_fitted,
+    split_point,
+    split_shells,
+)
+from repro.tuning.controller import (
+    A_MERGE_SHARDS,
+    A_RETRAIN_SHARD,
+    A_SPLIT_SHARD,
+)
+
+#: plan actions that require a build phase (everything else — switch-BMAT,
+#: presize — is metadata/capacity-only and executes directly at plan time)
+BUILD_ACTIONS = (A_RETRAIN_SHARD, A_SPLIT_SHARD, A_MERGE_SHARDS)
+
+
+@dataclasses.dataclass
+class BuildResult:
+    """One finished build: the delta to commit, or why there is none.
+
+    ``delta is None`` with ``error is None`` means the build concluded the
+    action is a structural no-op (e.g. a split of a shard whose live keys
+    collapsed to one value) — the plan is abandoned, not failed."""
+
+    plan: object                    # the MaintenancePlan that was built
+    delta: Optional[StateDelta]
+    build_seconds: float
+    error: Optional[Exception] = None
+
+
+def build(plan, snapshot: RouterSnapshot) -> Optional[StateDelta]:
+    """Phase 2: plan + immutable snapshot -> StateDelta (pure host build).
+
+    Reads only the snapshot; every array it produces is fresh. Returns
+    None when the action degenerates (unsplittable / unmergeable shard) —
+    the same conditions under which the live entry points return False.
+    """
+    t0 = time.perf_counter()
+    s = plan.shard
+    if plan.action == A_RETRAIN_SHARD:
+        shell = snapshot.shell(s)
+        retrain_shell_fitted(
+            shell, int(snapshot.state.slots.keys.shape[1]), gmm=plan.gmm
+        )
+        lo, hi = snapshot.shard_bounds(s)
+        return StateDelta(
+            epoch=snapshot.epoch, kind="retrain", shard=s,
+            key_lo=lo, key_hi=hi, shells=(shell,),
+            build_seconds=time.perf_counter() - t0,
+        )
+    if plan.action == A_SPLIT_SHARD:
+        shell = snapshot.shell(s)
+        keys, vals = shell.extract_live()
+        mid = split_point(keys)
+        if mid is None:
+            return None
+        left, right = split_shells(shell, keys, vals, mid, snapshot.cfg)
+        lo, hi = snapshot.shard_bounds(s)
+        return StateDelta(
+            epoch=snapshot.epoch, kind="split", shard=s,
+            key_lo=lo, key_hi=hi, shells=(left, right),
+            boundary=int(keys[mid]),
+            build_seconds=time.perf_counter() - t0,
+        )
+    if plan.action == A_MERGE_SHARDS:
+        if snapshot.n_shards < 2 or not (0 <= s < snapshot.n_shards - 1):
+            return None
+        sh1, sh2 = snapshot.shell(s), snapshot.shell(s + 1)
+        k1, v1 = sh1.extract_live()
+        k2, v2 = sh2.extract_live()
+        keys = np.concatenate([k1, k2])
+        vals = np.concatenate([v1, v2])
+        if len(keys) == 0:
+            return None
+        merged = merge_shells(
+            sh1, sh2, keys, vals, snapshot.cfg,
+            np.random.default_rng(snapshot.epoch),
+        )
+        lo, _ = snapshot.shard_bounds(s)
+        _, hi = snapshot.shard_bounds(s + 1)
+        return StateDelta(
+            epoch=snapshot.epoch, kind="merge", shard=s,
+            key_lo=lo, key_hi=hi, shells=(merged,),
+            build_seconds=time.perf_counter() - t0,
+        )
+    raise ValueError(f"action {plan.action} has no build phase")
+
+
+class MaintenanceExecutor:
+    """One daemon worker draining a (plan, snapshot) queue through ``build``."""
+
+    def __init__(self):
+        self._in: "queue.Queue" = queue.Queue()
+        self._out: "queue.Queue" = queue.Queue()
+        self._inflight = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- lifecycle -----------------------------------------------------------
+    def _ensure_thread(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._worker, name="uplif-maintenance", daemon=True
+            )
+            self._thread.start()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                item = self._in.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if item is None:
+                break
+            plan, snapshot = item
+            t0 = time.perf_counter()
+            try:
+                delta = build(plan, snapshot)
+                err = None
+            except Exception as e:  # surface on the serving thread
+                delta, err = None, e
+            self._out.put(
+                BuildResult(
+                    plan=plan, delta=delta,
+                    build_seconds=time.perf_counter() - t0, error=err,
+                )
+            )
+
+    def close(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._stop.set()
+            self._in.put(None)
+            self._thread.join(timeout=5.0)
+        self._thread = None
+        # drain leftovers (incl. the stop sentinel when the worker exited
+        # via the flag): a post-close submit() revives the worker, which
+        # must not inherit a stale None or build a pre-close plan
+        while True:
+            try:
+                item = self._in.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None:  # the sentinel was never counted
+                self._inflight = max(self._inflight - 1, 0)
+
+    # -- the scheduler-facing API --------------------------------------------
+    def submit(self, plan, snapshot: RouterSnapshot):
+        """Queue one build. The caller must hold the router's op-log (i.e.
+        ``snapshot`` came from ``router.snapshot()``) and not submit again
+        until the result was polled and committed/discarded."""
+        self._ensure_thread()
+        self._inflight += 1
+        self._in.put((plan, snapshot))
+
+    def poll(self) -> List[BuildResult]:
+        """All builds finished since the last poll (non-blocking)."""
+        out = []
+        while True:
+            try:
+                out.append(self._out.get_nowait())
+            except queue.Empty:
+                break
+        self._inflight -= len(out)
+        return out
+
+    @property
+    def inflight(self) -> int:
+        return self._inflight
+
+    def wait(self, timeout: float = 30.0) -> List[BuildResult]:
+        """Block until every submitted build finished; return the results.
+        Test/drain helper — serving code uses ``poll``."""
+        results = []
+        deadline = time.monotonic() + timeout
+        while self._inflight > 0 and time.monotonic() < deadline:
+            try:
+                results.append(self._out.get(timeout=0.05))
+                self._inflight -= 1
+            except queue.Empty:
+                continue
+        return results

@@ -76,6 +76,11 @@ class UpdateForecaster:
         self._s2 = np.zeros(K)   # sum of resp * x^2
         self.n_obs = 0
         self.n_batches = 0
+        # distribution-shift signal: EWMA of the per-step component-mean
+        # movement (span-normalized). Near 0 under a stationary stream,
+        # spikes when the insert distribution moves — the "shift" axis of
+        # the workload signature the Q-table store keys on.
+        self.drift_ewma = 0.0
         self._rng = np.random.default_rng(config.seed)
 
     # -- estimation ---------------------------------------------------------
@@ -131,6 +136,10 @@ class UpdateForecaster:
         mu = self._s1 / s0
         var = np.maximum(self._s2 / s0 - mu * mu, 0.0)
         std = np.maximum(np.sqrt(var), _MIN_STD_FRAC * self.span)
+        drift = float(
+            np.mean(np.abs(mu - np.asarray(self.gmm.means)))
+        ) / self.span
+        self.drift_ewma = 0.8 * self.drift_ewma + 0.2 * drift
         self.gmm = GMMState(
             weights=jnp.asarray(w, dtype=jnp.float64),
             means=jnp.asarray(mu, dtype=jnp.float64),

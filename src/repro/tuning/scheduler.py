@@ -1,36 +1,74 @@
-"""Budgeted background maintenance (DESIGN.md §7.4).
+"""Maintenance planning + the plan/build/commit pipeline (DESIGN.md §7.4/§8).
 
-The scheduler is the only component that *touches* the index: it runs
-between request waves, keeps a wall-clock token bucket (maintenance may use
-at most ``budget_fraction`` of serving time), and executes one controller
-action per decision point when the budget covers that action's learned cost
-estimate. Expensive actions therefore defer under load and catch up in
-quiet periods — maintenance follows traffic instead of fighting it.
+The scheduler no longer mutates the router inline. Each decision point
+emits a declarative ``MaintenancePlan`` (action, shard, forecast inputs,
+cost estimate) and routes it through three phases:
 
-Every action it can execute preserves the index's key→value mapping by
-construction (retrain/split/merge re-home live entries, presize only pads
-inert capacity), so maintenance is invisible to lookups — the property
-tests in tests/test_tuning.py pin this. The reward loop closes one decision
-later: the throughput/memory EWMAs measured over the waves *after* an
-action are Algorithm 1's "run N operations" observation for that action.
+  plan    — here, between waves: telemetry snapshot, capacity guards,
+            controller decision, budget reservation;
+  build   — ``tuning/executor.py``: the host-side unstack/retrain/restack
+            against an immutable ``RouterSnapshot``. Sync mode runs it
+            inline (the serving path stalls, as before); async mode runs it
+            on the executor's worker thread while serving continues;
+  commit  — back on the serving thread at a wave boundary:
+            ``ShardedUpLIF.commit`` validates the epoch, replays the
+            op-log (rebase-on-commit) and swaps the pytree atomically.
+
+Budget accounting is **commit-time**: planning only *reserves* the learned
+cost estimate (so the scheduler does not over-commit future budget), and
+the token bucket is charged the measured serving-path cost when the delta
+actually lands. A build abandoned mid-flight — epoch conflict, degenerate
+action, build error — releases its reservation untouched, so abandoned
+work never eats the budget that real maintenance needs.
+
+Capacity guards (forecast presize, forced absorb) and BMAT-type switches
+have no build phase: they are metadata/capacity-only and execute directly
+at plan time in both modes.
+
+The reward loop closes one decision later, as before; under async builds
+the action's structural effect may land another wave after that, which the
+Q-learner tolerates (the EWMAs it reads are themselves multi-wave windows).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.sharded import ShardedUpLIF
+from repro.core.types import GMMState
 from repro.tuning.controller import (
     A_KEEP,
+    A_MERGE_SHARDS,
     A_RETRAIN_SHARD,
+    A_SWITCH_BMAT,
     ACTION_NAMES,
     ShardTuningController,
 )
+from repro.tuning.executor import (
+    BUILD_ACTIONS,
+    MaintenanceExecutor,
+    build as build_plan,
+)
 from repro.tuning.forecast import UpdateForecaster
 from repro.tuning.telemetry import Telemetry
+
+
+@dataclasses.dataclass
+class MaintenancePlan:
+    """Declarative maintenance record: everything build + commit need."""
+
+    plan_id: int
+    epoch: int                     # epoch of the snapshot the build reads
+    wave: int                      # wave the decision was made on
+    action: int
+    shard: int
+    gmm: Optional[GMMState]        # forecast D_update for gap sizing
+    cost_estimate: float           # reserved against the budget until commit
+    forced: bool = False
 
 
 @dataclasses.dataclass
@@ -43,10 +81,11 @@ class SchedulerConfig:
     explore: bool = True           # epsilon-greedy (False = pure exploit)
     cost_ewma: float = 0.5         # action-cost estimate update weight
     max_budget_s: float = 30.0     # token-bucket cap (bounds catch-up bursts)
+    async_build: bool = False      # overlap builds with serving waves
 
 
 class MaintenanceScheduler:
-    """Executes controller actions between request waves, under budget."""
+    """Plans controller actions between waves; builds run sync or async."""
 
     def __init__(
         self,
@@ -67,6 +106,19 @@ class MaintenanceScheduler:
         self._cost_est: Dict[int, float] = {}
         self.time_in_maintenance = 0.0
         self.actions_log: List[dict] = []
+        # plan/build/commit bookkeeping
+        self.executor: Optional[MaintenanceExecutor] = (
+            MaintenanceExecutor() if config.async_build else None
+        )
+        self._inflight: Optional[MaintenancePlan] = None
+        self._reserved = 0.0           # budget held by the in-flight plan
+        self._next_plan_id = 0
+        self._stale_plan_ids: set = set()  # abandoned; late results dropped
+        self.n_planned = 0
+        self.n_committed = 0
+        self.n_conflicts = 0           # epoch-conflict discards
+        self.n_abandoned = 0           # degenerate/failed/timed-out builds
+        self.last_build_error: Optional[str] = None
 
     # -- bookkeeping ---------------------------------------------------------
     def observe_inserts(self, n: int):
@@ -75,11 +127,143 @@ class MaintenanceScheduler:
     def _estimated_cost(self, a: int) -> float:
         return self._cost_est.get(a, 0.05)  # optimistic until measured
 
+    def _available(self) -> float:
+        """Spendable budget = bucket minus the in-flight reservation."""
+        return self._budget - self._reserved
+
+    def _charge(self, a: int, dt: float):
+        """Commit-time charge: deduct the measured serving-path cost and
+        fold it into the learned per-action cost estimate."""
+        self._budget = max(self._budget - dt, 0.0)
+        w = self.cfg.cost_ewma
+        old = self._cost_est.get(a, dt)
+        self._cost_est[a] = (1 - w) * old + w * dt
+
+    def close(self):
+        if self.executor is not None:
+            self.executor.close()
+
+    # -- plan dispatch -------------------------------------------------------
+    def _make_plan(self, a: int, s: int, forced: bool) -> MaintenancePlan:
+        gmm = (
+            self.forecaster.gmm
+            if self.forecaster is not None and self.forecaster.ready
+            else None
+        )
+        self._next_plan_id += 1
+        self.n_planned += 1
+        return MaintenancePlan(
+            plan_id=self._next_plan_id,
+            epoch=-1,  # stamped from the snapshot at dispatch
+            wave=self._wave,
+            action=a,
+            shard=s,
+            gmm=gmm,
+            cost_estimate=self._estimated_cost(a),
+            forced=forced,
+        )
+
+    def _dispatch(self, index: ShardedUpLIF, plan: MaintenancePlan) -> bool:
+        """Run one plan through build + commit. Sync: inline (stalls the
+        wave, charged at its commit). Async: submit and return — the
+        estimate stays reserved until the build lands or is abandoned.
+        Returns whether the index changed NOW (sync commit)."""
+        snapshot = index.snapshot()
+        plan.epoch = snapshot.epoch
+        if self.executor is not None:
+            self.executor.submit(plan, snapshot)
+            self._inflight = plan
+            self._reserved = plan.cost_estimate
+            return False
+        t0 = time.perf_counter()
+        try:
+            delta = build_plan(plan, snapshot)
+        except Exception:
+            index.discard_build()
+            self.n_abandoned += 1
+            raise
+        if delta is None:
+            index.discard_build()
+            self.n_abandoned += 1
+            return False
+        ok = index.commit(delta)
+        if ok:
+            self._charge(plan.action, time.perf_counter() - t0)
+            self.n_committed += 1
+        else:
+            self.n_conflicts += 1
+        return ok
+
+    def _handle_result(self, index: ShardedUpLIF, res) -> bool:
+        """Commit (or abandon) one finished async build on the serving
+        thread. Releasing the reservation without a charge IS the refund
+        path for abandoned work."""
+        if res.plan.plan_id in self._stale_plan_ids:
+            # a build that outlived its drain timeout: its op-log is gone
+            # (possibly replaced by a newer build's) — committing it would
+            # replay the wrong log, so it is dropped unconditionally
+            self._stale_plan_ids.discard(res.plan.plan_id)
+            return False
+        self._inflight = None
+        self._reserved = 0.0
+        if res.error is not None or res.delta is None:
+            index.discard_build()
+            self.n_abandoned += 1
+            if res.error is not None:
+                # async must not silently degrade to never-tune: keep the
+                # reason visible (stats) and warn once per failure
+                self.last_build_error = repr(res.error)
+                warnings.warn(
+                    f"maintenance build failed ({ACTION_NAMES[res.plan.action]}"
+                    f" shard {res.plan.shard}): {res.error!r}",
+                    RuntimeWarning,
+                )
+            return False
+        t0 = time.perf_counter()
+        ok = index.commit(res.delta)
+        if ok:
+            # the serving path paid only the commit (row write + replay);
+            # the build ran off-path, so only the commit hits the bucket
+            self._charge(res.plan.action, time.perf_counter() - t0)
+            self.n_committed += 1
+        else:
+            self.n_conflicts += 1
+        return ok
+
+    def _commit_finished(self, index: ShardedUpLIF) -> int:
+        """Wave-boundary commit point: land every finished async build."""
+        if self.executor is None:
+            return 0
+        return sum(
+            self._handle_result(index, res) for res in self.executor.poll()
+        )
+
+    def drain(self, index: ShardedUpLIF, timeout: float = 30.0) -> int:
+        """Block until in-flight builds finish and commit them (shutdown /
+        test convergence helper; serving uses the non-blocking poll). A
+        build that outlives the timeout is ABANDONED: its op-log is
+        released (tracking would otherwise grow unbounded and block every
+        future snapshot) and its plan is marked stale so a late result can
+        never commit against a newer build's log."""
+        if self.executor is None:
+            return 0
+        n = sum(
+            self._handle_result(index, res)
+            for res in self.executor.wait(timeout)
+        )
+        if self._inflight is not None:
+            self._stale_plan_ids.add(self._inflight.plan_id)
+            self._inflight = None
+            self._reserved = 0.0
+            index.discard_build()
+            self.n_abandoned += 1
+        return n
+
     # -- the loop ------------------------------------------------------------
     def on_wave(
         self, index: ShardedUpLIF, n_ops: int, seconds: float
     ) -> Optional[dict]:
-        """Report one finished request wave; maybe run one maintenance step.
+        """Report one finished request wave; maybe plan one maintenance step.
 
         Returns the action record when a decision was made, else None.
         """
@@ -90,6 +274,9 @@ class MaintenanceScheduler:
         )
         self._wave += 1
         decide = self._wave % self.cfg.decide_every == 0
+
+        t0 = time.perf_counter()
+        committed = self._commit_finished(index)
 
         snap = self.telemetry.snapshot(index)
         heat = (
@@ -113,7 +300,6 @@ class MaintenanceScheduler:
         # absorbs in place need no buffer capacity, whatever the forecast
         # says). Capacity already used is the absorb guard's business,
         # never a reason to grow further.
-        t0 = time.perf_counter()
         presized = False
         bcap = int(index.state.bmat.keys.shape[1])
         if self.forecaster is not None and self.forecaster.ready:
@@ -125,8 +311,13 @@ class MaintenanceScheduler:
                 * self.forecaster.bmat_presize(index.boundaries, horizon)
             )
             if need > bcap and int(snap.bmat_size.max()) > bcap // 2:
+                p0 = time.perf_counter()
                 presized = index.presize_bmat(need)
                 bcap = int(index.state.bmat.keys.shape[1])
+                if presized:  # guards are charged as they run (no build)
+                    self._budget = max(
+                        self._budget - (time.perf_counter() - p0), 0.0
+                    )
 
         # capacity-debt guard (analogous to LSM compaction-debt limits): a
         # delta buffer about to overflow its capacity would force an
@@ -135,7 +326,9 @@ class MaintenanceScheduler:
         # watches the FULLEST buffer, not the (heat-biased) focus shard —
         # any shard can hit the debt limit. This also keeps learning
         # safe: the controller explores within bounds the scheduler
-        # enforces.
+        # enforces. With async builds the forced absorb becomes an urgent
+        # *plan*; while one is already in flight the buffer may organically
+        # grow once, which the monotone shape discipline absorbs.
         hot = int(np.argmax(snap.bmat_size))
         forced = (
             int(snap.bmat_size[hot]) > 0
@@ -150,7 +343,8 @@ class MaintenanceScheduler:
         if decide and self._pending is not None:
             p_state, p_action, _ = self._pending
             r = self.controller.reward(
-                snap.throughput_ewma, snap.memory_ewma
+                snap.throughput_ewma, snap.memory_ewma,
+                snap.range_lat_ewma,
             )
             self.controller.update(p_state, p_action, r, state, mask)
             self._pending = None
@@ -164,22 +358,41 @@ class MaintenanceScheduler:
                 state, mask, explore=self.cfg.explore,
                 snap=snap, s=s, heat=heat,
             )
-            if a != A_KEEP and self._estimated_cost(a) > self._budget:
-                a, deferred = A_KEEP, True  # can't afford it yet — defer
-        elif not presized:
+        elif not presized and committed == 0:
             return None
 
-        changed = self.controller.apply_action(
-            index, snap, s_apply, a, self.forecaster
-        )
+        # -- translate the decision into a plan / direct action -------------
+        changed = False
+        if a in BUILD_ACTIONS:
+            if self._inflight is not None:
+                # one build at a time: the op-log supports a single rebase
+                a, deferred = A_KEEP, True
+            elif not forced and self._estimated_cost(a) > self._available():
+                a, deferred = A_KEEP, True  # can't afford it yet — defer
+            else:
+                if a == A_MERGE_SHARDS:
+                    s_apply = self.controller.coldest_pair(snap)
+                self.controller.action_counts[a] += 1
+                changed = self._dispatch(
+                    index, self._make_plan(a, s_apply, forced)
+                )
+        elif a == A_SWITCH_BMAT:
+            if self._inflight is not None:
+                # the switch bumps the epoch and would void the build
+                a, deferred = A_KEEP, True
+            elif self._estimated_cost(a) > self._available():
+                a, deferred = A_KEEP, True
+            else:
+                self.controller.action_counts[a] += 1
+                sw0 = time.perf_counter()  # own timer: t0 covers commits
+                index.switch_bmat_type()
+                self._charge(A_SWITCH_BMAT, time.perf_counter() - sw0)
+                changed = True
+        else:
+            self.controller.action_counts[A_KEEP] += 1
+
         dt = time.perf_counter() - t0
         self.time_in_maintenance += dt
-        if a != A_KEEP or presized:
-            self._budget = max(self._budget - dt, 0.0)
-        if a != A_KEEP:
-            w = self.cfg.cost_ewma
-            old = self._cost_est.get(a, dt)
-            self._cost_est[a] = (1 - w) * old + w * dt
         if decide and not forced and (self.cfg.explore or a != A_KEEP):
             self._pending = (state, a, mask)
 
@@ -191,8 +404,11 @@ class MaintenanceScheduler:
             "deferred": deferred,
             "forced": forced,
             "presized": presized,
+            "committed": committed,
+            "inflight": self._inflight is not None,
             "cost_s": dt,
             "budget_s": self._budget,
+            "reserved_s": self._reserved,
             "throughput_ewma": snap.throughput_ewma,
             "n_shards": snap.n_shards,
             "bmat_fill_max": float(snap.bmat_fill.max()),

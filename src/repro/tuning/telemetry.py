@@ -74,6 +74,7 @@ class TelemetrySnapshot:
     bmat_type: str               # S5
     throughput_ewma: float       # ops/s over recent waves
     memory_ewma: float           # index bytes
+    range_lat_ewma: float        # seconds per range query (0 = none seen)
 
     def shard_measures(self, s: int) -> dict:
         """Section 4.1 measure dict for shard ``s`` (controller state input)."""
@@ -104,7 +105,9 @@ class Telemetry:
         self.cfg = config
         self.throughput_ewma = 0.0
         self.memory_ewma = 0.0
+        self.range_lat_ewma = 0.0
         self.n_waves = 0
+        self.n_range_obs = 0
         self._snap_count = 0
 
     def observe_wave(self, n_ops: int, seconds: float):
@@ -118,6 +121,20 @@ class Telemetry:
             else (1 - a) * self.throughput_ewma + a * tput
         )
         self.n_waves += 1
+
+    def observe_range(self, n_queries: int, seconds: float):
+        """Feed measured range-scan latency (per query) into its EWMA —
+        the signal that folds scan cost into the controller reward, making
+        scan-favoring BMAT-type switches learnable (Fig. 4 crossover)."""
+        if seconds < 0 or n_queries <= 0:
+            return
+        lat = seconds / n_queries
+        a = self.cfg.ewma_alpha
+        self.range_lat_ewma = (
+            lat if self.n_range_obs == 0
+            else (1 - a) * self.range_lat_ewma + a * lat
+        )
+        self.n_range_obs += 1
 
     def snapshot(self, index: ShardedUpLIF) -> TelemetrySnapshot:
         """Read the per-shard signals (one device reduce + one transfer)."""
@@ -149,4 +166,5 @@ class Telemetry:
             bmat_type=index.bmat_kind,
             throughput_ewma=self.throughput_ewma,
             memory_ewma=self.memory_ewma,
+            range_lat_ewma=self.range_lat_ewma,
         )

@@ -1,0 +1,426 @@
+"""Plan/build/commit maintenance pipeline (ISSUE 3): versioned router
+state (snapshot / epoch / commit / rebase-on-commit), the background
+executor, sync-vs-async semantic equivalence under a distribution shift,
+commit-time budget accounting, and torn-read safety of the atomic swap."""
+import threading
+import time
+
+import numpy as np
+
+import repro.core  # noqa: F401 — x64
+from repro.core import ShardedUpLIF
+from repro.core.sharded import retrain_shell_fitted
+from repro.core.uplif import UpLIFConfig
+from repro.tuning import (
+    A_RETRAIN_SHARD,
+    A_SPLIT_SHARD,
+    ControllerConfig,
+    ForecastConfig,
+    MaintenancePlan,
+    QTableStore,
+    SchedulerConfig,
+    SelfTuner,
+    ShardTuningController,
+    Telemetry,
+    TunerConfig,
+    build,
+)
+from tests.conftest import make_keys
+
+CFG = UpLIFConfig(batch_bucket=256)
+
+
+def _router(n=20_000, seed=7, shards=4, cfg=CFG):
+    keys = make_keys(n, seed)
+    return keys, ShardedUpLIF(keys, keys * 2, cfg, n_shards=shards)
+
+
+def _plan(action, shard, epoch=-1):
+    return MaintenancePlan(
+        plan_id=1, epoch=epoch, wave=0, action=action, shard=shard,
+        gmm=None, cost_estimate=0.05,
+    )
+
+
+# ---------------------------------------------------------------------------
+# core protocol: snapshot → build → commit with rebase-on-commit
+# ---------------------------------------------------------------------------
+
+
+def test_commit_replays_mid_build_ops():
+    """Inserts AND deletes that arrive between snapshot and commit must
+    survive the swap: the rebuilt shard replaces the live row wholesale,
+    so the op-log replay is what carries them over."""
+    keys, idx = _router()
+    rng = np.random.default_rng(0)
+    snap = idx.snapshot()
+    # ops landing while the "build" runs, routed across all shards
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 4000).astype(np.int64), keys)
+    idx.insert(new, new + 7)
+    dead = keys[100:200]
+    idx.delete(dead)
+    delta = build(_plan(A_RETRAIN_SHARD, 1), snap)
+    assert idx.commit(delta)
+    assert idx.epoch == 1 and idx.n_commits == 1
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 7)
+    f, _ = idx.lookup(dead)
+    assert not f.any()
+    keep = np.setdiff1d(keys, dead)
+    f, v = idx.lookup(keep)
+    assert f.all() and np.array_equal(v, keep * 2)
+
+
+def test_commit_split_delta_and_ranges():
+    keys, idx = _router(shards=2)
+    snap = idx.snapshot()
+    rng = np.random.default_rng(1)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 2000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    delta = build(_plan(A_SPLIT_SHARD, 0), snap)
+    assert delta.kind == "split" and len(delta.shells) == 2
+    assert idx.commit(delta)
+    assert idx.n_shards == 3 and len(idx.boundaries) == 2
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 1)
+    ks, _ = idx.range_query(int(keys[10]), int(keys[400]), max_out=1024)
+    assert np.all(np.diff(ks) > 0)
+
+
+def test_epoch_conflict_discards_build():
+    """A structural revision between snapshot and commit invalidates the
+    delta: commit refuses it, counts a discard, and the index keeps the
+    (correct) live state."""
+    keys, idx = _router()
+    rng = np.random.default_rng(2)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 3000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    snap = idx.snapshot()
+    delta = build(_plan(A_RETRAIN_SHARD, 0), snap)
+    idx.retrain_shard(1)          # direct structural op bumps the epoch
+    assert not idx.commit(delta)  # stale build discarded
+    assert idx.n_commits == 0 and idx.n_discards == 1
+    assert not idx._tracking      # op-log released for the next build
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 1)
+    f, v = idx.lookup(keys)
+    assert f.all() and np.array_equal(v, keys * 2)
+    # the next snapshot/build/commit round succeeds
+    snap = idx.snapshot()
+    assert idx.commit(build(_plan(A_RETRAIN_SHARD, 0), snap))
+
+
+def test_sync_mode_runs_the_same_pipeline():
+    """Sync is async-with-inline-build: the scheduler still emits plans,
+    builds against a snapshot and commits — n_committed/epoch advance."""
+    keys, idx = _router(n=30_000, seed=9)
+    tuner = SelfTuner(
+        TunerConfig(
+            forecast=ForecastConfig(min_obs=128, seed=0),
+            scheduler=SchedulerConfig(decide_every=2, force_absorb_fill=0.3),
+        )
+    ).attach(idx)
+    rng = np.random.default_rng(5)
+    base = int(keys.max())
+    for _ in range(10):
+        ins = np.unique((base + rng.integers(1, 1 << 30, 800)).astype(np.int64))
+        idx.insert(ins, ins + 1)
+        tuner.observe_inserts(ins)
+        tuner.after_wave(800, 0.5)  # generous budget: actions affordable
+    assert tuner.scheduler.n_planned > 0
+    assert tuner.scheduler.n_committed > 0
+    assert idx.epoch == idx.n_commits > 0
+
+
+# ---------------------------------------------------------------------------
+# sync/async equivalence under a mid-run distribution shift
+# ---------------------------------------------------------------------------
+
+
+def test_sync_async_equivalence_under_shift():
+    """The identical op sequence through sync and async maintenance must
+    produce identical lookup results over the full live key set (delta
+    replay may reorder work internally, never change the mapping)."""
+    results = {}
+    for mode in ("sync", "async"):
+        keys, idx = _router(n=30_000, seed=11)
+        tuner = SelfTuner(
+            TunerConfig(
+                controller=ControllerConfig(seed=3),
+                forecast=ForecastConfig(min_obs=128, seed=3),
+                scheduler=SchedulerConfig(
+                    decide_every=2, force_absorb_fill=0.4,
+                    async_build=(mode == "async"),
+                ),
+            )
+        ).attach(idx)
+        rng = np.random.default_rng(13)
+        base = int(keys.max())
+        inserted, deleted = [], []
+        for wave in range(16):
+            if wave < 6:  # phase 1: inside the bootstrap range
+                ins = np.setdiff1d(
+                    rng.integers(0, base, 600).astype(np.int64), keys
+                )
+            else:         # phase 2: shift to unseen upper range
+                ins = np.unique(
+                    (base + rng.integers(1, 1 << 30, 600)).astype(np.int64)
+                )
+            idx.insert(ins, ins + 5)
+            inserted.append(ins)
+            dead = keys[wave * 50 : wave * 50 + 25]
+            idx.delete(dead)
+            deleted.append(dead)
+            idx.lookup(rng.choice(keys, 256))
+            tuner.observe_inserts(ins)
+            tuner.after_wave(881, 0.5)
+            if mode == "async":
+                time.sleep(0.01)  # let builds land on some waves
+        tuner.drain()
+        tuner.close()
+        all_ins = np.unique(np.concatenate(inserted))
+        all_del = np.concatenate(deleted)
+        live = np.setdiff1d(np.concatenate([keys, all_ins]), all_del)
+        f, v = idx.lookup(live)
+        results[mode] = (f, v, idx.lookup(all_del)[0])
+    f_s, v_s, fd_s = results["sync"]
+    f_a, v_a, fd_a = results["async"]
+    assert f_s.all() and f_a.all()
+    assert np.array_equal(v_s, v_a)
+    assert not fd_s.any() and not fd_a.any()
+
+
+# ---------------------------------------------------------------------------
+# commit-time budget accounting
+# ---------------------------------------------------------------------------
+
+
+def test_abandoned_build_refunds_budget():
+    """Async plans only RESERVE their cost estimate; an epoch conflict
+    releases the reservation without charging the bucket."""
+    keys, idx = _router()
+    rng = np.random.default_rng(4)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 3000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    tuner = SelfTuner(
+        TunerConfig(scheduler=SchedulerConfig(async_build=True))
+    ).attach(idx)
+    sched = tuner.scheduler
+    sched._budget = 2.0
+    sched._cost_est[A_RETRAIN_SHARD] = 1.5
+    plan = sched._make_plan(A_RETRAIN_SHARD, 0, forced=False)
+    assert not sched._dispatch(idx, plan)      # async: submitted, not done
+    assert sched._reserved == 1.5
+    assert sched._available() == 0.5           # reservation blocks replans
+    idx.retrain_shard(1)                       # epoch bump → conflict
+    committed = sched.drain(idx)               # build lands, commit refuses
+    assert committed == 0
+    assert sched.n_conflicts == 1 and sched.n_committed == 0
+    assert sched._reserved == 0.0              # reservation released …
+    assert sched._budget == 2.0                # … with no charge: refunded
+    # the discarded build never polluted the learned cost estimate
+    assert sched._cost_est[A_RETRAIN_SHARD] == 1.5
+    tuner.close()
+
+
+def test_commit_charges_budget_at_commit_time():
+    keys, idx = _router()
+    rng = np.random.default_rng(6)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 3000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    tuner = SelfTuner(
+        TunerConfig(scheduler=SchedulerConfig(async_build=True))
+    ).attach(idx)
+    sched = tuner.scheduler
+    sched._budget = 2.0
+    sched._cost_est[A_RETRAIN_SHARD] = 1.5
+    plan = sched._make_plan(A_RETRAIN_SHARD, 0, forced=False)
+    sched._dispatch(idx, plan)
+    committed = sched.drain(idx)
+    assert committed == 1 and sched.n_committed == 1
+    assert sched._reserved == 0.0
+    # charged the measured commit cost (tiny), not the 1.5s estimate
+    assert 2.0 - sched._budget < 1.0
+    # the learned estimate moved toward the real commit cost
+    assert sched._cost_est[A_RETRAIN_SHARD] < 1.5
+    tuner.close()
+
+
+def test_drain_timeout_abandons_and_drops_late_result(monkeypatch):
+    """A build that outlives the drain timeout must release the op-log
+    (else tracking grows unbounded and blocks every future snapshot) and
+    its late result must never commit — by then the log it would replay is
+    gone or belongs to a newer build."""
+    import repro.tuning.executor as executor_mod
+
+    keys, idx = _router()
+    rng = np.random.default_rng(8)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 2000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    tuner = SelfTuner(
+        TunerConfig(scheduler=SchedulerConfig(async_build=True))
+    ).attach(idx)
+    sched = tuner.scheduler
+
+    real_build = executor_mod.build
+
+    def slow_build(plan, snapshot):
+        time.sleep(0.6)
+        return real_build(plan, snapshot)
+
+    monkeypatch.setattr(executor_mod, "build", slow_build)
+    sched._dispatch(idx, sched._make_plan(A_RETRAIN_SHARD, 0, forced=False))
+    assert sched.drain(idx, timeout=0.05) == 0   # too slow: abandoned
+    assert sched._inflight is None and sched._reserved == 0.0
+    assert not idx._tracking                      # op-log released
+    assert sched.n_abandoned == 1
+    # ops arriving after the abandonment — a late commit would lose them
+    late = np.setdiff1d(rng.integers(0, 1 << 48, 1500).astype(np.int64),
+                        np.concatenate([keys, new]))
+    idx.insert(late, late + 9)
+    assert sched.drain(idx, timeout=10.0) == 0    # late result: dropped
+    assert idx.n_commits == 0
+    # the pipeline is fully usable again afterwards
+    snap = idx.snapshot()
+    assert idx.commit(build(_plan(A_RETRAIN_SHARD, 0), snap))
+    for probe, want in ((new, new + 1), (late, late + 9)):
+        f, v = idx.lookup(probe)
+        assert f.all() and np.array_equal(v, want)
+    tuner.close()
+
+
+# ---------------------------------------------------------------------------
+# threaded stress: no torn reads across the atomic swap
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_lookups_never_tear():
+    """Reader threads hammer lookups of a fixed probe set whose mapping no
+    maintenance action changes, while the main thread inserts and commits
+    retrains AND a split. Any torn read (new boundaries with old pytree,
+    mismatched static) would corrupt results or raise."""
+    keys, idx = _router(n=24_000, seed=21)
+    probe = keys[:: len(keys) // 512][:512]
+    want = probe * 2
+    stop = threading.Event()
+    failures = []
+    acked = []  # (keys, vals) batches the main thread already inserted
+
+    def reader():
+        while not stop.is_set():
+            try:
+                f, v = idx.lookup(probe)
+                if not (f.all() and np.array_equal(v, want)):
+                    failures.append("mismatch")
+                    return
+                if acked:
+                    # read-your-writes across the commit swap: keys that
+                    # were acknowledged BEFORE a commit must never vanish
+                    # during its swap+replay window
+                    ak, av = acked[-1]
+                    f, v = idx.lookup(ak)
+                    if not (f.all() and np.array_equal(v, av)):
+                        failures.append("acked insert vanished mid-commit")
+                        return
+            except Exception as e:  # noqa: BLE001 — any tear is a failure
+                failures.append(repr(e))
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        rng = np.random.default_rng(22)
+        base = int(keys.max())
+        for round_ in range(6):
+            new = np.unique(
+                (base + rng.integers(1, 1 << 30, 1000)).astype(np.int64)
+            )
+            snap = idx.snapshot()
+            # acknowledged AFTER the snapshot: only the op-log replay
+            # carries these over the commit — the window finding #1 hit
+            idx.insert(new, new + 1)
+            acked.append((new, new + 1))
+            action = A_SPLIT_SHARD if round_ == 3 else A_RETRAIN_SHARD
+            delta = build(_plan(action, round_ % idx.n_shards), snap)
+            if delta is None:
+                idx.discard_build()
+            else:
+                idx.commit(delta)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+    assert not failures, failures
+    assert idx.n_commits >= 5
+
+
+# ---------------------------------------------------------------------------
+# satellites: range-latency reward + Q-table persistence
+# ---------------------------------------------------------------------------
+
+
+def test_range_latency_feeds_reward():
+    tel = Telemetry()
+    tel.observe_range(4, 0.4)       # 100ms/query
+    assert tel.range_lat_ewma > 0
+    ctl = ShardTuningController(ControllerConfig(eta_range=0.2))
+    r_fast = ctl.reward(1000.0, 100.0, 0.001)
+    r_slow = ctl.reward(1000.0, 100.0, 0.1)
+    assert r_slow < r_fast          # scan latency now costs reward
+    # point-only workloads (no range observations) keep the 2-term reward
+    ctl2 = ShardTuningController(ControllerConfig(eta_range=0.2))
+    assert ctl2.reward(1000.0, 100.0) == ctl2.reward(1000.0, 100.0, 0.0)
+
+
+def test_qtable_store_roundtrip_and_nearest(tmp_path):
+    path = str(tmp_path / "qtables.json")
+    store = QTableStore(path)
+    c1 = ShardTuningController()
+    c1._q_row((1,) * 7)[A_RETRAIN_SHARD] = 3.0
+    store.save((0.5, 2.0, 0.1), c1)
+    c2 = ShardTuningController()
+    c2._q_row((2,) * 7)[A_SPLIT_SHARD] = 7.0
+    store.save((0.05, 1.0, 0.0), c2)
+
+    fresh = QTableStore(path)                   # reload from disk
+    near = fresh.nearest((0.45, 1.8, 0.12))
+    assert near["signature"] == [0.5, 2.0, 0.1]
+    c3 = ShardTuningController()
+    c3._q_row((1,) * 7)[A_SPLIT_SHARD] = 9.0    # own learning wins
+    assert fresh.warm_start(c3, (0.45, 1.8, 0.12))
+    assert c3.q[(1,) * 7][A_SPLIT_SHARD] == 9.0  # kept (only_missing)
+    # unseen states from the store are absent; re-save + nearest flips
+    near2 = fresh.nearest((0.04, 1.1, 0.01))
+    assert near2["signature"] == [0.05, 1.0, 0.0]
+    c4 = ShardTuningController()
+    assert fresh.warm_start(c4, (0.04, 1.1, 0.01))
+    assert c4.q[(2,) * 7][A_SPLIT_SHARD] == 7.0
+
+
+def test_selftuner_signature_and_persist(tmp_path):
+    path = str(tmp_path / "qtables.json")
+    keys, idx = _router(n=20_000, seed=31)
+    tuner = SelfTuner(
+        TunerConfig(
+            forecast=ForecastConfig(min_obs=64, seed=0),
+            qtable_path=path, warmup_waves=2,
+        )
+    ).attach(idx)
+    rng = np.random.default_rng(32)
+    for _ in range(6):
+        ins = np.unique(rng.integers(0, 1 << 40, 256).astype(np.int64))
+        idx.insert(ins, ins + 1)
+        tuner.observe_inserts(ins)
+        tuner.after_wave(512, 0.05)
+    sig = tuner.signature()
+    assert 0.0 < sig[0] <= 1.0          # write rate measured
+    assert tuner._warm_started          # warm-start attempted post-warmup
+    tuner.controller._q_row((5,) * 7)[A_RETRAIN_SHARD] = 1.0
+    tuner.persist()
+    assert QTableStore(path).nearest(sig) is not None
+    # a fresh session warm-starts from the saved table
+    c = ShardTuningController()
+    assert QTableStore(path).warm_start(c, sig)
+    assert c.q[(5,) * 7][A_RETRAIN_SHARD] == 1.0
+    tuner.close()
