@@ -5,16 +5,23 @@ write-heavy workload whose insert stream SHIFTS mid-run from the bootstrap
 key range to a previously-unseen upper range. Four maintenance policies
 run the identical (deterministically seeded) op sequence:
 
-  tuned          — the tuning subsystem with SYNC builds: plan/build/commit
-                   all run between waves on the serving path (the stall the
-                   paper's "no retraining stalls" claim is measured against);
-  tuned_async    — same planner, builds on the executor thread: the serving
-                   path pays only plan + commit (row write + op-log replay),
-                   the host rebuild overlaps the following waves;
-  never_tune     — no maintenance: the delta buffer absorbs the shift
-                   (grows, reallocates, recompiles, slows every op);
-  always_retrain — full retrain on a fixed cadence, paying the whole-index
-                   rebuild whether or not any shard needs it.
+  tuned           — the tuning subsystem with SYNC builds: plan/build/commit
+                    all run between waves on the serving path (the stall the
+                    paper's "no retraining stalls" claim is measured against);
+  tuned_async     — same planner, ONE build on the executor thread: the
+                    serving path pays only plan + commit (row write + full
+                    op-log replay in one wave), the host rebuild overlaps
+                    the following waves;
+  tuned_concurrent— the ISSUE 4 pipeline: up to 2 builds on DISJOINT shard
+                    intervals in flight at once (per-interval op-logs) and
+                    PACED commits — each commit replays at most
+                    ``--replay-cap`` logged ops per wave, draining across
+                    waves, so the replay burst (the last unbounded
+                    serving-path cost) is bounded like every other op;
+  never_tune      — no maintenance: the delta buffer absorbs the shift
+                    (grows, reallocates, recompiles, slows every op);
+  always_retrain  — full retrain on a fixed cadence, paying the whole-index
+                    rebuild whether or not any shard needs it.
 
 Each policy runs in its OWN subprocess, so every policy pays its own cold
 jit-compile and reallocation debt — sharing one process would let whoever
@@ -26,9 +33,14 @@ Per-wave serving-path latency (lookup + insert + range scans + the
 between-wave tuner hook) is recorded per policy; the ``async_vs_sync`` row
 compares the post-warmup p50/p95 and checks final index contents are
 equivalent (identical lookup results over every key the run inserted —
-the delta-replay rebase must lose nothing). The comparison row also
-reports the paper's Section 4.3 composite objective R = η·tput/max_tput −
-(1−η)·mem/max_mem (η = 0.7), the quantity the controller optimizes.
+the delta-replay rebase must lose nothing). The ``concurrent_vs_async``
+row is the ISSUE 4 acceptance check: per-wave p95 with 2 concurrent
+builds + paced commits must not exceed single-build async p95, final
+digests must match sync exactly, and the per-wave replay-burst histogram
+(ops rebased at each wave boundary) shows the pacing cap actually
+bounding the bursts. The comparison rows also report the paper's Section
+4.3 composite objective R = η·tput/max_tput − (1−η)·mem/max_mem (η =
+0.7), the quantity the controller optimizes.
 
 Each wave issues a few range scans and reports their latency through
 ``tuner.observe_range`` — the telemetry signal that folds scan cost into
@@ -49,7 +61,10 @@ import numpy as np
 
 ETA = 0.7  # Section 5.1 reward weight
 
-POLICIES = ("tuned", "tuned_async", "never_tune", "always_retrain")
+POLICIES = (
+    "tuned", "tuned_async", "tuned_concurrent", "never_tune",
+    "always_retrain",
+)
 WARMUP_WAVES = 5       # excluded from latency percentiles (cold jit debt)
 RANGES_PER_WAVE = 2    # range scans issued (and timed) per wave
 
@@ -112,6 +127,7 @@ def _run_policy(
     n_shards: int,
     retrain_every: int,
     seed: int,
+    replay_cap: int = 2048,
 ):
     import repro.core  # noqa: F401 — x64
     from repro.core import ShardedUpLIF
@@ -125,21 +141,29 @@ def _run_policy(
         init, init + 1, UpLIFConfig(batch_bucket=4096), n_shards=n_shards
     )
     tuner = None
-    if policy in ("tuned", "tuned_async"):
+    if policy in ("tuned", "tuned_async", "tuned_concurrent"):
+        if policy == "tuned_concurrent":
+            sched = SchedulerConfig(
+                async_build=True,
+                max_concurrent_builds=2,
+                commit_replay_cap=replay_cap,
+            )
+        else:
+            sched = SchedulerConfig(async_build=(policy != "tuned"))
         tuner = SelfTuner(
             TunerConfig(
                 controller=ControllerConfig(seed=seed),
                 forecast=ForecastConfig(seed=seed),
-                scheduler=SchedulerConfig(
-                    async_build=(policy == "tuned_async")
-                ),
+                scheduler=sched,
             )
         ).attach(idx)
     ops = 0
     wave_s = []
+    replay_bursts = []  # ops rebased at each wave boundary (commit pacing)
     t0 = time.perf_counter()
     for w, (reads, ins, scans) in enumerate(plan):
         w0 = time.perf_counter()
+        rep0 = idx.n_replayed_ops
         idx.lookup(reads)
         idx.insert(ins, ins + 1)
         r0 = time.perf_counter()
@@ -155,6 +179,7 @@ def _run_policy(
         elif policy == "always_retrain" and (w + 1) % retrain_every == 0:
             idx.retrain_full()
         wave_s.append(time.perf_counter() - w0)
+        replay_bursts.append(int(idx.n_replayed_ops - rep0))
     if tuner is not None:
         tuner.drain()
     dt = time.perf_counter() - t0
@@ -164,6 +189,8 @@ def _run_policy(
     assert f.all() and np.array_equal(v, probe_i + 1), policy
     all_keys = np.concatenate([init] + [p[1] for p in plan])
     lat = np.asarray(wave_s[WARMUP_WAVES:]) * 1e3
+    bursts = np.asarray(replay_bursts[WARMUP_WAVES:])
+    nz = bursts[bursts > 0]
     res = {
         "policy": policy,
         "ops_per_s": ops / dt,
@@ -171,6 +198,13 @@ def _run_policy(
         "p50_wave_ms": float(np.percentile(lat, 50)),
         "p95_wave_ms": float(np.percentile(lat, 95)),
         "max_wave_ms": float(lat.max()),
+        # per-wave replay-burst histogram: the commit-pacing evidence —
+        # with a cap, max must stay within cap + one logged batch
+        "replay_burst_per_wave": [int(b) for b in bursts],
+        "replay_burst_waves": int(len(nz)),
+        "replay_burst_p50": float(np.percentile(nz, 50)) if len(nz) else 0.0,
+        "replay_burst_p95": float(np.percentile(nz, 95)) if len(nz) else 0.0,
+        "replay_burst_max": int(nz.max()) if len(nz) else 0,
         "digest": _content_digest(idx, all_keys),
         "index_bytes": int(idx.index_bytes()),
         "n_shards": idx.n_shards,
@@ -200,6 +234,7 @@ def _spawn_policy(policy: str, ns) -> dict:
         "--n-keys", str(ns.n_keys), "--waves", str(ns.waves),
         "--batch", str(ns.batch), "--shards", str(ns.shards),
         "--retrain-every", str(ns.retrain_every), "--seed", str(ns.seed),
+        "--replay-cap", str(ns.replay_cap),
     ]
     try:
         subprocess.run(cmd, check=True, timeout=1800, env=env)
@@ -216,12 +251,13 @@ def run(
     n_shards: int = 4,
     retrain_every: int = 8,
     seed: int = 0,
+    replay_cap: int = 2048,
 ):
     from benchmarks.common import emit
 
     ns = argparse.Namespace(
         n_keys=n_keys, waves=waves, batch=batch, shards=n_shards,
-        retrain_every=retrain_every, seed=seed,
+        retrain_every=retrain_every, seed=seed, replay_cap=replay_cap,
     )
     results = {p: _spawn_policy(p, ns) for p in POLICIES}
     max_tput = max(r["ops_per_s"] for r in results.values())
@@ -312,6 +348,48 @@ def run(
             "waves": waves,
         }
     )
+    # ISSUE 4 acceptance: 2 concurrent disjoint builds + paced commits must
+    # keep per-wave serving-path p95 at or below single-build async (the
+    # replay burst was the last unbounded wave cost) while storing exactly
+    # what the sync pipeline stores.
+    conc_r = results["tuned_concurrent"]
+    conc_equal = sync_r["digest"] == conc_r["digest"]
+    rows.append(
+        {
+            "name": "concurrent_vs_async",
+            "us_per_call": "",
+            "derived": (
+                f"p95 {conc_r['p95_wave_ms']:.1f}ms vs "
+                f"{async_r['p95_wave_ms']:.1f}ms "
+                f"(le_async={conc_r['p95_wave_ms'] <= async_r['p95_wave_ms']}), "
+                f"replay bursts p95 {conc_r['replay_burst_p95']:.0f} "
+                f"max {conc_r['replay_burst_max']} ops "
+                f"(cap={replay_cap}) vs async max "
+                f"{async_r['replay_burst_max']}, "
+                f"contents_equal={conc_equal}, "
+                f"commits={conc_r['tuner']['commits']}, "
+                f"drained={conc_r['tuner']['drained']}"
+            ),
+            "concurrent_p95_wave_ms": conc_r["p95_wave_ms"],
+            "async_p95_wave_ms": async_r["p95_wave_ms"],
+            "concurrent_p95_le_async": (
+                conc_r["p95_wave_ms"] <= async_r["p95_wave_ms"]
+            ),
+            "concurrent_p50_wave_ms": conc_r["p50_wave_ms"],
+            "replay_cap": replay_cap,
+            "replay_burst_p50": conc_r["replay_burst_p50"],
+            "replay_burst_p95": conc_r["replay_burst_p95"],
+            "replay_burst_max": conc_r["replay_burst_max"],
+            "async_replay_burst_max": async_r["replay_burst_max"],
+            "contents_equal": conc_equal,
+            "concurrent_commits": conc_r["tuner"]["commits"],
+            "concurrent_drained": conc_r["tuner"]["drained"],
+            "concurrent_conflicts": conc_r["tuner"]["conflicts"],
+            "max_concurrent_builds": 2,
+            "shift_at": shift_at,
+            "waves": waves,
+        }
+    )
     emit(rows, "self_tuning")
     return rows
 
@@ -326,19 +404,20 @@ def main():
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--retrain-every", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replay-cap", type=int, default=2048)
     args = ap.parse_args()
     if args.policy is None:
         run(
             n_keys=args.n_keys, waves=args.waves, batch=args.batch,
             n_shards=args.shards, retrain_every=args.retrain_every,
-            seed=args.seed,
+            seed=args.seed, replay_cap=args.replay_cap,
         )
         return
     init, plan, _ = _workload(args.n_keys, args.waves, args.batch, args.seed)
     res = _run_policy(
         args.policy, init, plan,
         n_shards=args.shards, retrain_every=args.retrain_every,
-        seed=args.seed,
+        seed=args.seed, replay_cap=args.replay_cap,
     )
     with open(args.out, "w") as fh:
         json.dump(res, fh)

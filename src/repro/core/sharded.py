@@ -21,14 +21,22 @@ capacity, spline knots, BMAT capacity), which is what makes the leaf-wise
 stacking legal; padding obeys the fill-forward invariants so the padded
 tails are inert.
 
-State is **versioned** (DESIGN.md §8): an epoch counter marks structural
-revisions, ``snapshot()`` freezes an immutable view for background builds
-and starts an op-log, and ``commit(delta)`` lands a rebuilt shard with
-epoch validation + op-log replay (rebase-on-commit) + one atomic
-reference swap — the substrate of the async plan/build/commit pipeline in
-``repro/tuning``. Mutations are single-writer (the serving thread), but
-concurrent reader threads are safe: they grab (state, boundaries, static)
-as one consistent view under the swap lock.
+State is **versioned** (DESIGN.md §8): an epoch counter orders structural
+revisions and every revision records the key interval it touched, so
+validation is per-interval — a split/merge only conflicts with builds
+whose interval it intersects. ``snapshot(shards=...)`` freezes an
+immutable view for a background build and starts a *per-interval* op-log
+(several builds on disjoint intervals may be in flight at once), and
+``commit(delta, replay_cap=...)`` lands a rebuilt shard with interval
+validation + capped op-log replay (rebase-on-commit): when the log is
+longer than ``replay_cap`` ops the commit parks in a **draining** state —
+the rebuilt shells catch up batch by batch across waves while the old
+rows keep serving (so reads are never stale), and the atomic reference
+swap happens only when the residual log is empty. This is the substrate
+of the concurrent plan/build/commit pipeline in ``repro/tuning``.
+Mutations are single-writer (the serving thread), but concurrent reader
+threads are safe: they grab (state, boundaries, static) as one consistent
+view under the swap lock.
 
 The public API mirrors ``UpLIF`` (lookup / insert / delete / range_query /
 range_query_batch / size / memory accounting / tuning hooks), so the
@@ -39,7 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,14 +109,19 @@ class _ShardMeta:
 # a copy of the boundaries and of the per-shard host metadata. ``StateDelta``
 # is the build's output — rebuilt shard shell(s) plus the key interval they
 # own — and ``ShardedUpLIF.commit`` applies it against the LIVE router:
-# epoch validation, row write / restack, replay of the op-log that
-# accumulated while the build ran (rebase-on-commit), one atomic swap.
+# interval-revision validation, capped rebase of the interval's op-log into
+# the rebuilt shells, row write / restack, one atomic swap.
 # --------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class RouterSnapshot:
-    """Immutable view of a router at one epoch; builds read ONLY this."""
+    """Immutable view of a router at one epoch; builds read ONLY this.
+
+    ``build_id`` names the per-interval op-log ``snapshot()`` opened for
+    this build; ``key_lo``/``key_hi`` bound the keyspace the build owns —
+    only ops routing into that interval are logged against it, and only
+    revisions intersecting it can invalidate the eventual commit."""
 
     epoch: int
     state: UpLIFState
@@ -118,6 +131,9 @@ class RouterSnapshot:
     cfg: UpLIFConfig
     bmat_kind: str
     rs_iters: int
+    build_id: int = -1
+    key_lo: int = 0
+    key_hi: int = int(KEY_MAX)
 
     def shell(self, s: int) -> UpLIF:
         """Materialize shard ``s`` of the snapshot as a host UpLIF shell.
@@ -157,6 +173,53 @@ class StateDelta:
     shells: Tuple[UpLIF, ...]
     boundary: Optional[int] = None
     build_seconds: float = 0.0
+    build_id: int = -1
+
+
+@dataclasses.dataclass
+class _BuildLog:
+    """One in-flight build's rebase log: the insert/delete batches that
+    routed into its key interval since the snapshot. ``pos`` is the replay
+    cursor — once the build's commit is accepted, batches before ``pos``
+    have already been replayed into the staged shells; the tail keeps
+    growing while the commit drains."""
+
+    build_id: int
+    epoch: int                 # snapshot epoch (revision-ordinal floor)
+    key_lo: int
+    key_hi: int
+    # entries before ``pos`` are consumed and freed (set to None)
+    log: List[Optional[Tuple[str, np.ndarray, Optional[np.ndarray]]]] = (
+        dataclasses.field(default_factory=list)
+    )
+    pos: int = 0
+
+    @property
+    def backlog_ops(self) -> int:
+        return sum(len(k) for _, k, _ in self.log[self.pos:])
+
+
+def intervals_overlap(lo: int, hi: int, b_lo: int, b_hi: int) -> bool:
+    """Half-open [lo, hi) ∩ [b_lo, b_hi) ≠ ∅ — THE overlap predicate every
+    admission/conflict path shares (snapshot, revision validation, and the
+    scheduler's interval admission must agree exactly)."""
+    return b_lo < hi and lo < b_hi
+
+
+@dataclasses.dataclass
+class _DrainingCommit:
+    """An accepted commit whose replay is paced across waves.
+
+    The rebuilt ``shells`` are STAGED: they absorb the interval's logged
+    ops batch by batch (``cuts`` are the interval edges each shell owns —
+    len(shells)+1 entries) while the OLD rows keep serving every read and
+    write. Only when the residual log is empty do the caught-up shells
+    swap in atomically — so commit cost per wave is bounded by the replay
+    cap, and reads never observe a state missing acknowledged writes."""
+
+    delta: StateDelta
+    shells: Tuple[UpLIF, ...]
+    cuts: Tuple[int, ...]
 
 
 def _shell_from(
@@ -292,20 +355,26 @@ class ShardedUpLIF:
         self.n_merges = 0
         self._rng = np.random.default_rng(0)
         # -- versioned state (plan/build/commit; DESIGN.md §8) -------------
-        # epoch counts structural revisions (retrain/split/merge/switch/
-        # commit); a build carries the epoch of its snapshot and commit
-        # discards it on mismatch. The op-log records inserts/deletes that
-        # arrive while a build is in flight so commit can rebase them onto
-        # the rebuilt shard. The lock only guards the reference swaps (and
-        # readers' reference grabs): ops are still single-writer — only
-        # concurrent READERS are supported against a mutating router.
+        # epoch orders structural revisions (retrain/split/merge/switch/
+        # commit-swap); every revision also records the key interval it
+        # touched, so a build conflicts only with revisions that intersect
+        # its own interval — disjoint builds commit independently. Each
+        # in-flight build owns a per-interval op-log recording the
+        # inserts/deletes that route into its keyspace, so commit can
+        # rebase them onto the rebuilt shells (capped per wave: a long log
+        # parks the commit in the draining map until it has caught up).
+        # The lock only guards the reference swaps (and readers' reference
+        # grabs): ops are still single-writer — only concurrent READERS
+        # are supported against a mutating router.
         self.epoch = 0
         self.n_commits = 0
         self.n_discards = 0
+        self.n_replayed_ops = 0
         self._lock = threading.RLock()
-        self._oplog: List[Tuple[str, np.ndarray, Optional[np.ndarray]]] = []
-        self._tracking = False
-        self._in_replay = False
+        self._logs: Dict[int, _BuildLog] = {}
+        self._drains: Dict[int, _DrainingCommit] = {}
+        self._revisions: List[Tuple[int, int, int]] = []  # (ordinal, lo, hi)
+        self._next_build_id = 0
         self._restack(shells)
 
     # -- stacking ------------------------------------------------------------
@@ -512,6 +581,20 @@ class ShardedUpLIF:
         self.n_lookups += n
         return np.asarray(f)[:n], np.asarray(v)[:n]
 
+    def _log_op(
+        self, kind: str, keys: np.ndarray, vals: Optional[np.ndarray]
+    ):
+        """Record one op batch against every in-flight build whose key
+        interval it intersects (a build only ever rebases ops it owns)."""
+        for bl in self._logs.values():
+            m = (keys >= bl.key_lo) & (keys < bl.key_hi)
+            if not m.any():
+                continue
+            # mask indexing already yields fresh arrays — no extra copy
+            bl.log.append(
+                (kind, keys[m], vals[m] if vals is not None else None)
+            )
+
     def insert(self, keys: np.ndarray, vals: Optional[np.ndarray] = None) -> int:
         keys = np.asarray(keys, dtype=np.int64)
         if vals is None:
@@ -519,10 +602,9 @@ class ShardedUpLIF:
         vals = np.asarray(vals, dtype=np.int64)
         if len(keys) == 0:
             return 0
-        if self._tracking and not self._in_replay:
-            self._oplog.append(("insert", keys.copy(), vals.copy()))
-        if not self._in_replay:
-            self._observe_updates(keys)
+        if self._logs:
+            self._log_op("insert", keys, vals)
+        self._observe_updates(keys)
         q, n, vm = self._pad_route(keys, vals)
         self._ensure_bmat_capacity(int(q.shape[0]))
         state, res = fops.sinsert(
@@ -534,8 +616,8 @@ class ShardedUpLIF:
 
     def delete(self, keys: np.ndarray) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.int64)
-        if self._tracking and not self._in_replay:
-            self._oplog.append(("delete", keys.copy(), None))
+        if self._logs:
+            self._log_op("delete", keys, None)
         q, n = self._pad_route(keys)
         state, hit = fops.sdelete(self.state, q, self._jbounds, static=self._static())
         with self._lock:
@@ -637,15 +719,81 @@ class ShardedUpLIF:
             )
 
     # -- versioned-state protocol (plan/build/commit; DESIGN.md §8) ------------
-    def snapshot(self) -> RouterSnapshot:
-        """Freeze the current state for a background build and start the
-        op-log. One build in flight at a time: a second snapshot before
-        commit/discard would clobber the first build's rebase log."""
-        if self._tracking:
-            raise RuntimeError("a build is already in flight (op-log active)")
+    @property
+    def _tracking(self) -> bool:
+        """True while any build's op-log is active (back-compat probe)."""
+        return bool(self._logs)
+
+    def _shard_interval(self, s_first: int, s_last: int = -1) -> Tuple[int, int]:
+        """Key interval [lo, hi) owned by the contiguous shard run
+        ``s_first .. s_last`` under the CURRENT boundaries."""
+        if s_last < 0:
+            s_last = s_first
+        lo = 0 if s_first == 0 else int(self.boundaries[s_first - 1])
+        hi = (
+            int(KEY_MAX)
+            if s_last >= self.n_shards - 1
+            else int(self.boundaries[s_last])
+        )
+        return lo, hi
+
+    def _record_revision(self, lo: int, hi: int):
+        """Mark a structural revision over [lo, hi): builds whose interval
+        intersects it can no longer commit (their shard indexing and row
+        contents are stale); disjoint builds are untouched."""
+        self._revisions.append((self.epoch, int(lo), int(hi)))
+        self.epoch += 1
+        self._prune_revisions()
+
+    def _prune_revisions(self):
+        """Drop revisions no active build could still conflict with."""
+        if not self._logs:
+            self._revisions.clear()
+            return
+        floor = min(bl.epoch for bl in self._logs.values())
+        self._revisions = [r for r in self._revisions if r[0] >= floor]
+
+    def _conflicts(self, epoch: int, lo: int, hi: int) -> bool:
+        return any(
+            e >= epoch and intervals_overlap(lo, hi, r_lo, r_hi)
+            for e, r_lo, r_hi in self._revisions
+        )
+
+    def active_intervals(self) -> List[Tuple[int, int]]:
+        """Key intervals owned by in-flight builds and draining commits —
+        the scheduler's admission-control input (new plans must not
+        overlap any of these)."""
+        return [(bl.key_lo, bl.key_hi) for bl in self._logs.values()]
+
+    def snapshot(
+        self, shards: Optional[Sequence[int]] = None
+    ) -> RouterSnapshot:
+        """Freeze the current state for a background build of the given
+        contiguous shard run (default: the whole router) and open its
+        per-interval op-log. Builds on disjoint intervals may be in flight
+        concurrently; an overlapping snapshot is a caller bug — the
+        scheduler admission-controls by interval overlap."""
+        if shards is None:
+            shards = range(self.n_shards)
+        shards = sorted(int(s) for s in shards)
+        if not shards or shards[0] < 0 or shards[-1] >= self.n_shards:
+            raise ValueError(f"shards out of range: {shards}")
+        if shards != list(range(shards[0], shards[-1] + 1)):
+            # a gap would open a log over keyspace the build never rebuilds
+            raise ValueError(f"shards must be contiguous: {shards}")
+        lo, hi = self._shard_interval(shards[0], shards[-1])
+        for b_lo, b_hi in self.active_intervals():
+            if intervals_overlap(lo, hi, b_lo, b_hi):
+                raise RuntimeError(
+                    "a build is already in flight for an overlapping key "
+                    f"interval [{b_lo}, {b_hi})"
+                )
         with self._lock:
-            self._oplog = []
-            self._tracking = True
+            self._next_build_id += 1
+            bid = self._next_build_id
+            self._logs[bid] = _BuildLog(
+                build_id=bid, epoch=self.epoch, key_lo=lo, key_hi=hi
+            )
             return RouterSnapshot(
                 epoch=self.epoch,
                 state=self.state,
@@ -655,51 +803,178 @@ class ShardedUpLIF:
                 cfg=self.cfg,
                 bmat_kind=self.bmat_kind,
                 rs_iters=self.rs_iters,
+                build_id=bid,
+                key_lo=lo,
+                key_hi=hi,
             )
 
-    def discard_build(self):
-        """Drop the in-flight build's op-log (build failed or was abandoned)."""
-        self._oplog = []
-        self._tracking = False
-        self.n_discards += 1
+    def discard_build(self, build_id: Optional[int] = None):
+        """Drop a build's op-log and any staged drain (build failed, was
+        abandoned, or its interval was revised under it). ``None`` discards
+        every active build (shutdown path)."""
+        ids = list(self._logs) if build_id is None else [build_id]
+        for bid in ids:
+            if self._logs.pop(bid, None) is not None:
+                self.n_discards += 1
+            self._drains.pop(bid, None)
+        self._prune_revisions()
 
-    def commit(self, delta: StateDelta) -> bool:
-        """Apply a finished build to the live router — the wave-boundary
-        atomic swap. Validates the epoch first: any structural revision
-        since the snapshot (another commit, a direct retrain/split/merge, a
-        BMAT-type switch) invalidates the delta's shard indexing, so the
-        build is discarded and the caller replans. On success the logged
-        inserts/deletes that routed into the rebuilt key interval are
-        replayed onto the new rows (rebase-on-commit) — ops outside the
-        interval already live in rows the delta didn't replace."""
-        if delta.epoch != self.epoch:
-            self.discard_build()
+    def _resolve_shard(self, delta: StateDelta) -> Optional[int]:
+        """Map the delta's key interval back to a CURRENT shard index.
+        Disjoint commits during the build/drain only shift indices; the
+        interval itself must still be exactly one shard (retrain/split) or
+        one adjacent pair (merge) — anything else is a conflict the
+        revision check should already have caught."""
+        s = int(np.searchsorted(self.boundaries, delta.key_lo, side="right"))
+        if s >= self.n_shards:
+            return None
+        lo, hi = self._shard_interval(s)
+        if lo != delta.key_lo:
+            return None
+        if delta.kind == "merge":
+            if s + 1 >= self.n_shards:
+                return None
+            hi = self._shard_interval(s + 1)[1]
+        return s if hi == delta.key_hi else None
+
+    def commit(
+        self, delta: StateDelta, replay_cap: Optional[int] = None
+    ) -> bool:
+        """Accept a finished build. Validates the interval first: any
+        structural revision since the snapshot that intersects the delta's
+        keyspace (an overlapping commit, a direct retrain/split/merge, a
+        BMAT-type switch) invalidates it — the build is discarded and the
+        caller replans. Disjoint revisions do NOT conflict: the delta's
+        shard index is re-resolved from its key interval.
+
+        On acceptance the interval's logged ops are replayed into the
+        rebuilt shells (rebase-on-commit), whole batches at a time, until
+        ``replay_cap`` ops have been replayed (None = unbounded). If the
+        log runs dry the caught-up shells swap in atomically and the
+        commit completes now; otherwise it parks in the draining state —
+        the OLD rows keep serving reads and writes (new ops into the
+        interval keep appending to the log), and ``advance_drain`` resumes
+        the replay at later wave boundaries. Returns False on conflict,
+        True when the commit was accepted (committed or draining)."""
+        bl = self._logs.get(delta.build_id)
+        if bl is None or self._conflicts(delta.epoch, delta.key_lo,
+                                         delta.key_hi):
+            self.discard_build(delta.build_id)
             return False
-        log, self._oplog, self._tracking = self._oplog, [], False
-        # the whole apply + replay is one critical section: a reader that
-        # won the race between the row swap and the replay would see the
-        # rebuilt (snapshot-era) shard WITHOUT the ops logged since the
-        # snapshot — a read-your-writes violation, not just a torn read
+        if self._resolve_shard(delta) is None:
+            self.discard_build(delta.build_id)
+            return False
+        if delta.kind == "split":
+            cuts = (delta.key_lo, int(delta.boundary), delta.key_hi)
+        else:
+            cuts = (delta.key_lo, delta.key_hi)
+        drain = _DrainingCommit(delta=delta, shells=delta.shells, cuts=cuts)
+        self._drains[delta.build_id] = drain
+        self._advance_one(drain, replay_cap)
+        return True
+
+    @property
+    def draining(self) -> bool:
+        return bool(self._drains)
+
+    def draining_builds(self) -> List[int]:
+        return list(self._drains)
+
+    def drain_backlog(self, build_id: Optional[int] = None) -> int:
+        """Un-replayed ops still owed by draining commits."""
+        ids = self.draining_builds() if build_id is None else [build_id]
+        return sum(
+            self._logs[b].backlog_ops for b in ids if b in self._logs
+        )
+
+    def advance_drain(
+        self, build_id: int, replay_cap: Optional[int] = None
+    ) -> bool:
+        """Replay up to ``replay_cap`` more ops of one draining commit
+        (whole batches, so pacing never changes the replayed call
+        sequence); swap atomically if it caught up. Aborts the drain when
+        an intersecting revision landed since the snapshot. Returns True
+        when the commit completed (swapped) this call."""
+        drain = self._drains.get(build_id)
+        if drain is None:
+            return False
+        bl = self._logs[build_id]
+        if self._conflicts(bl.epoch, bl.key_lo, bl.key_hi):
+            self.discard_build(build_id)
+            return False
+        return self._advance_one(drain, replay_cap)
+
+    def advance_drains(self, replay_cap: Optional[int] = None) -> int:
+        """Wave-boundary hook: advance every draining commit; returns the
+        number that completed (swapped) this call."""
+        return sum(
+            self.advance_drain(bid, replay_cap)
+            for bid in self.draining_builds()
+        )
+
+    def _advance_one(
+        self, drain: _DrainingCommit, replay_cap: Optional[int]
+    ) -> bool:
+        """Replay whole logged batches into the staged shells until the
+        op budget is spent or the log is dry; swap when dry. Runs on the
+        serving thread, so no new ops can interleave mid-call — "dry after
+        the last batch" really is the catch-up point."""
+        bl = self._logs[drain.delta.build_id]
+        done = 0
+        while bl.pos < len(bl.log):
+            if replay_cap is not None and done >= replay_cap:
+                return False
+            kind, keys, vals = bl.log[bl.pos]
+            bl.log[bl.pos] = None  # consumed: free it — a long drain must
+            bl.pos += 1            # hold only the unreplayed tail
+            for shell, c_lo, c_hi in zip(
+                drain.shells, drain.cuts[:-1], drain.cuts[1:]
+            ):
+                m = (keys >= c_lo) & (keys < c_hi)
+                if not m.any():
+                    continue
+                if kind == "insert":
+                    shell.insert(keys[m], vals[m])
+                else:
+                    shell.delete(keys[m])
+            done += len(keys)
+            self.n_replayed_ops += len(keys)
+        return self._finish_drain(drain)
+
+    def _finish_drain(self, drain: _DrainingCommit) -> bool:
+        """The wave-boundary atomic swap: land the caught-up shells. The
+        shells now hold exactly the old rows' live contents (snapshot +
+        every logged op, in arrival order) in the rebuilt layout, so the
+        swap changes layout — never what a lookup returns."""
+        delta = drain.delta
+        s = self._resolve_shard(delta)
+        if s is None:  # a disjoint revision SHOULD leave us resolvable;
+            # anything else means the interval was revised under us
+            self.discard_build(delta.build_id)
+            return False
+        del self._drains[delta.build_id]
+        del self._logs[delta.build_id]
         with self._lock:
-            self._apply_delta(delta)
-            self._replay(log, delta.key_lo, delta.key_hi)
-            self.epoch += 1
+            self._apply_delta(delta, s, drain.shells)
+            self._record_revision(delta.key_lo, delta.key_hi)
             self.n_commits += 1
         return True
 
-    def _apply_delta(self, delta: StateDelta):
+    def _apply_delta(
+        self, delta: StateDelta, s: int, shells: Tuple[UpLIF, ...]
+    ):
         if delta.kind == "retrain":
-            sh = delta.shells[0]
-            if not self._write_shard(delta.shard, sh):
-                shells = [
-                    sh if i == delta.shard else self._unstack_shell(i)
-                    for i in range(self.n_shards)
-                ]
-                self._restack(shells)
+            sh = shells[0]
+            if not self._write_shard(s, sh):
+                self._restack(
+                    [
+                        sh if i == s else self._unstack_shell(i)
+                        for i in range(self.n_shards)
+                    ]
+                )
             self.n_retrains += 1
         elif delta.kind == "split":
-            s = delta.shard
-            shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+            live = [self._unstack_shell(i) for i in range(self.n_shards)]
             with self._lock:
                 self.boundaries = np.insert(
                     self.boundaries, s, delta.boundary
@@ -707,39 +982,17 @@ class ShardedUpLIF:
                 self._jbounds = jnp.asarray(self.boundaries)
                 self.n_shards += 1
                 self.n_splits += 1
-                self._restack(
-                    shells[:s] + list(delta.shells) + shells[s + 1:]
-                )
+                self._restack(live[:s] + list(shells) + live[s + 1:])
         elif delta.kind == "merge":
-            s = delta.shard
-            shells = [self._unstack_shell(i) for i in range(self.n_shards)]
+            live = [self._unstack_shell(i) for i in range(self.n_shards)]
             with self._lock:
                 self.boundaries = np.delete(self.boundaries, s)
                 self._jbounds = jnp.asarray(self.boundaries)
                 self.n_shards -= 1
                 self.n_merges += 1
-                self._restack(
-                    shells[:s] + list(delta.shells) + shells[s + 2:]
-                )
+                self._restack(live[:s] + list(shells) + live[s + 2:])
         else:
             raise ValueError(f"unknown delta kind: {delta.kind}")
-
-    def _replay(self, log, lo: int, hi: int):
-        """Re-apply logged ops that route into [lo, hi) in arrival order.
-        Replay must neither re-log (the log was consumed) nor re-feed the
-        D_update reservoirs (the keys were observed at first arrival)."""
-        self._in_replay = True
-        try:
-            for kind, keys, vals in log:
-                m = (keys >= lo) & (keys < hi)
-                if not m.any():
-                    continue
-                if kind == "insert":
-                    self.insert(keys[m], vals[m])
-                else:
-                    self.delete(keys[m])
-        finally:
-            self._in_replay = False
 
     # -- tuning hooks (Section 4.2, applied per shard) -------------------------
     def retrain_full(self, gmm: Optional[GMMState] = None):
@@ -748,7 +1001,7 @@ class ShardedUpLIF:
             sh.retrain_full(gmm)
         self._restack(shells)
         self.n_retrains += 1
-        self.epoch += 1
+        self._record_revision(0, int(KEY_MAX))
 
     def retrain_shard(self, s: int, gmm: Optional[GMMState] = None):
         """Targeted tuning action: full retrain of ONE shard — absorb its
@@ -776,7 +1029,7 @@ class ShardedUpLIF:
             ]
             self._restack(shells)
         self.n_retrains += 1
-        self.epoch += 1
+        self._record_revision(*self._shard_interval(s))
 
     def retrain_subset(self, quantiles: int = 16) -> int:
         # absorb on the shard with the largest delta buffer (cheapest win)
@@ -786,13 +1039,16 @@ class ShardedUpLIF:
         absorbed = shells[worst].retrain_subset(quantiles)
         self._restack(shells)
         self.n_retrains += 1
-        self.epoch += 1
+        self._record_revision(*self._shard_interval(worst))
         return absorbed
 
     def switch_bmat_type(self):
+        # the BMAT layout is shared by every shard, so the switch revises
+        # the WHOLE keyspace: any in-flight build's shells were built for
+        # the other traversal and must be discarded at their commit
         with self._lock:
             self.bmat_kind = BPMAT if self.bmat_kind == RBMAT else RBMAT
-            self.epoch += 1
+            self._record_revision(0, int(KEY_MAX))
 
     # -- structural maintenance (tuning-subsystem entry points) ----------------
     def split_shard(self, s: int) -> bool:
@@ -810,13 +1066,14 @@ class ShardedUpLIF:
             return False
         cut = int(keys[mid])  # first key of the right half == new boundary
         left, right = split_shells(shells[s], keys, vals, mid, self.cfg)
+        lo, hi = self._shard_interval(s)
         with self._lock:
             self.boundaries = np.insert(self.boundaries, s, cut)
             self._jbounds = jnp.asarray(self.boundaries)
             self.n_shards += 1
             self.n_splits += 1
             self._restack(shells[:s] + [left, right] + shells[s + 1:])
-            self.epoch += 1
+            self._record_revision(lo, hi)
         return True
 
     def merge_shards(self, s: int) -> bool:
@@ -835,13 +1092,15 @@ class ShardedUpLIF:
             return False
         merged = merge_shells(shells[s], shells[s + 1], keys, vals,
                               self.cfg, self._rng)
+        lo = self._shard_interval(s)[0]
+        hi = self._shard_interval(s + 1)[1]
         with self._lock:
             self.boundaries = np.delete(self.boundaries, s)
             self._jbounds = jnp.asarray(self.boundaries)
             self.n_shards -= 1
             self.n_merges += 1
             self._restack(shells[:s] + [merged] + shells[s + 2:])
-            self.epoch += 1
+            self._record_revision(lo, hi)
         return True
 
     def presize_bmat(self, per_shard_capacity: int) -> bool:

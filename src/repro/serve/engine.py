@@ -163,6 +163,8 @@ class ServeEngine:
         max_len: int = 512,
         tuner: Any = _DEFAULT_TUNER,
         async_maintenance: bool = True,
+        max_concurrent_builds: int = 2,
+        commit_replay_cap: Optional[int] = 4096,
     ):
         self.cfg = cfg
         self.params = params
@@ -172,9 +174,19 @@ class ServeEngine:
             # self-tuning on unless explicitly disabled; the engine defaults
             # to the async pipeline so index rebuilds overlap decode waves —
             # pass async_maintenance=False to get the stalling sync builds
-            # (the config switch bench_self_tuning measures)
+            # (the config switch bench_self_tuning measures).
+            # max_concurrent_builds sizes the maintenance worker pool
+            # (disjoint shard rebuilds overlap each other, not just
+            # serving) and commit_replay_cap paces each commit's op-log
+            # rebase so commit cost per wave stays bounded like every
+            # other serving-path op.
             tuner = (
-                SelfTuner.overlapped() if async_maintenance else SelfTuner()
+                SelfTuner.overlapped(
+                    max_concurrent_builds=max_concurrent_builds,
+                    commit_replay_cap=commit_replay_cap,
+                )
+                if async_maintenance
+                else SelfTuner()
             )
         self.prefix_index = PrefixCacheIndex(tuner=tuner)
         self._decode = jax.jit(

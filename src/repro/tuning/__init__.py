@@ -14,10 +14,13 @@ Closes the paper's adaptive loop over the functional sharded core:
                split-shard / merge-shards, persisted per workload
                signature through ``QTableStore``;
   scheduler  — plan/build/commit pipeline: decisions become declarative
-               ``MaintenancePlan`` records; builds run inline (sync) or on
-               the ``MaintenanceExecutor`` worker thread (async), and land
-               via the router's epoch-validated, rebase-on-commit
-               ``commit`` at a wave boundary. Maintenance never alters
+               ``MaintenancePlan`` records admitted by interval overlap +
+               aggregate budget; builds run inline (sync) or on the
+               ``MaintenanceExecutor`` worker pool (async — disjoint
+               shard intervals rebuild concurrently), and land via the
+               router's interval-validated, rebase-on-commit ``commit``
+               at a wave boundary, paced by ``commit_replay_cap`` (long
+               rebase logs drain across waves). Maintenance never alters
                lookup results, only latency/memory.
 
 ``SelfTuner`` bundles them into the one object serving code attaches:
@@ -106,12 +109,27 @@ class SelfTuner:
         self._write_rate_ewma = 0.0
 
     @classmethod
-    def overlapped(cls, config: Optional[TunerConfig] = None) -> "SelfTuner":
-        """A tuner whose builds overlap serving waves (async pipeline)."""
+    def overlapped(
+        cls,
+        config: Optional[TunerConfig] = None,
+        max_concurrent_builds: Optional[int] = None,
+        commit_replay_cap: Optional[int] = None,
+    ) -> "SelfTuner":
+        """A tuner whose builds overlap serving waves (async pipeline).
+
+        ``max_concurrent_builds`` sizes the executor's worker pool —
+        builds for disjoint shard intervals run concurrently;
+        ``commit_replay_cap`` paces commits (at most this many logged ops
+        replayed per wave; a longer rebase log drains across waves)."""
         config = config or TunerConfig()
+        overrides: dict = {"async_build": True}
+        if max_concurrent_builds is not None:
+            overrides["max_concurrent_builds"] = int(max_concurrent_builds)
+        if commit_replay_cap is not None:
+            overrides["commit_replay_cap"] = int(commit_replay_cap)
         config = dataclasses.replace(
             config,
-            scheduler=dataclasses.replace(config.scheduler, async_build=True),
+            scheduler=dataclasses.replace(config.scheduler, **overrides),
         )
         return cls(config)
 
@@ -222,10 +240,21 @@ class SelfTuner:
             ),
             "n_shards": self.index.n_shards if self.index else 0,
             "async_build": bool(sched and sched.cfg.async_build),
+            "max_concurrent_builds": (
+                sched.cfg.max_concurrent_builds if sched else 1
+            ),
+            "commit_replay_cap": (
+                sched.cfg.commit_replay_cap if sched else None
+            ),
             "plans": sched.n_planned if sched else 0,
             "commits": sched.n_committed if sched else 0,
+            "drained": sched.n_drained if sched else 0,
             "conflicts": sched.n_conflicts if sched else 0,
             "abandoned": sched.n_abandoned if sched else 0,
+            "replayed_ops": self.index.n_replayed_ops if self.index else 0,
+            "drain_backlog_ops": (
+                self.index.drain_backlog() if self.index else 0
+            ),
             "last_build_error": sched.last_build_error if sched else None,
             "epoch": self.index.epoch if self.index else 0,
             "signature": list(self.signature()),

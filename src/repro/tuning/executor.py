@@ -9,12 +9,15 @@ the scheduler submits (plan, snapshot) pairs after a decision, serving
 waves continue on the main thread, and finished deltas are collected with
 ``poll()`` at the next wave boundary, where the scheduler commits them.
 
-Why a thread and not a process: builds are dominated by numpy sorts/
-concatenations and XLA executions, both of which release the GIL, so one
-worker overlaps with serving on a second core without serializing the hot
+Why threads and not processes: builds are dominated by numpy sorts/
+concatenations and XLA executions, both of which release the GIL, so
+workers overlap with serving on spare cores without serializing the hot
 path; and the delta must share the live process's jax arrays for the
-zero-copy commit. Exactly one worker: deltas commit in submission order,
-and the router's op-log supports a single in-flight build.
+zero-copy commit. The pool runs ``n_workers`` daemon threads — the router
+keeps one op-log per build keyed by interval, so builds for DISJOINT
+shard sets proceed (and commit) independently; the scheduler
+admission-controls by interval overlap, never submitting two builds that
+could rebase the same keyspace.
 
 Sync mode uses the *same* ``build`` function inline (scheduler calls
 build + commit back to back with an empty op-log), so the two modes differ
@@ -82,6 +85,7 @@ def build(plan, snapshot: RouterSnapshot) -> Optional[StateDelta]:
             epoch=snapshot.epoch, kind="retrain", shard=s,
             key_lo=lo, key_hi=hi, shells=(shell,),
             build_seconds=time.perf_counter() - t0,
+            build_id=snapshot.build_id,
         )
     if plan.action == A_SPLIT_SHARD:
         shell = snapshot.shell(s)
@@ -96,6 +100,7 @@ def build(plan, snapshot: RouterSnapshot) -> Optional[StateDelta]:
             key_lo=lo, key_hi=hi, shells=(left, right),
             boundary=int(keys[mid]),
             build_seconds=time.perf_counter() - t0,
+            build_id=snapshot.build_id,
         )
     if plan.action == A_MERGE_SHARDS:
         if snapshot.n_shards < 2 or not (0 <= s < snapshot.n_shards - 1):
@@ -117,28 +122,37 @@ def build(plan, snapshot: RouterSnapshot) -> Optional[StateDelta]:
             epoch=snapshot.epoch, kind="merge", shard=s,
             key_lo=lo, key_hi=hi, shells=(merged,),
             build_seconds=time.perf_counter() - t0,
+            build_id=snapshot.build_id,
         )
     raise ValueError(f"action {plan.action} has no build phase")
 
 
 class MaintenanceExecutor:
-    """One daemon worker draining a (plan, snapshot) queue through ``build``."""
+    """A pool of daemon workers draining a (plan, snapshot) queue through
+    ``build``. ``n_workers`` bounds how many builds run concurrently —
+    the scheduler's ``max_concurrent_builds`` maps straight onto it."""
 
-    def __init__(self):
+    def __init__(self, n_workers: int = 1):
+        self.n_workers = max(1, int(n_workers))
         self._in: "queue.Queue" = queue.Queue()
         self._out: "queue.Queue" = queue.Queue()
         self._inflight = 0
-        self._thread: Optional[threading.Thread] = None
+        self._threads: List[threading.Thread] = []
         self._stop = threading.Event()
 
     # -- lifecycle -----------------------------------------------------------
-    def _ensure_thread(self):
-        if self._thread is None or not self._thread.is_alive():
+    def _ensure_threads(self):
+        self._threads = [t for t in self._threads if t.is_alive()]
+        if not self._threads:
             self._stop.clear()
-            self._thread = threading.Thread(
-                target=self._worker, name="uplif-maintenance", daemon=True
+        while len(self._threads) < self.n_workers:
+            t = threading.Thread(
+                target=self._worker,
+                name=f"uplif-maintenance-{len(self._threads)}",
+                daemon=True,
             )
-            self._thread.start()
+            t.start()
+            self._threads.append(t)
 
     def _worker(self):
         while not self._stop.is_set():
@@ -163,28 +177,31 @@ class MaintenanceExecutor:
             )
 
     def close(self):
-        if self._thread is not None and self._thread.is_alive():
+        alive = [t for t in self._threads if t.is_alive()]
+        if alive:
             self._stop.set()
-            self._in.put(None)
-            self._thread.join(timeout=5.0)
-        self._thread = None
-        # drain leftovers (incl. the stop sentinel when the worker exited
-        # via the flag): a post-close submit() revives the worker, which
-        # must not inherit a stale None or build a pre-close plan
+            for _ in alive:
+                self._in.put(None)
+            for t in alive:
+                t.join(timeout=5.0)
+        self._threads = []
+        # drain leftovers (incl. stop sentinels when workers exited via
+        # the flag): a post-close submit() revives the pool, which must
+        # not inherit a stale None or build a pre-close plan
         while True:
             try:
                 item = self._in.get_nowait()
             except queue.Empty:
                 break
-            if item is not None:  # the sentinel was never counted
+            if item is not None:  # sentinels were never counted
                 self._inflight = max(self._inflight - 1, 0)
 
     # -- the scheduler-facing API --------------------------------------------
     def submit(self, plan, snapshot: RouterSnapshot):
-        """Queue one build. The caller must hold the router's op-log (i.e.
-        ``snapshot`` came from ``router.snapshot()``) and not submit again
-        until the result was polled and committed/discarded."""
-        self._ensure_thread()
+        """Queue one build. The caller must hold the build's op-log (i.e.
+        ``snapshot`` came from ``router.snapshot(shards)``) and must not
+        submit a build overlapping an in-flight build's key interval."""
+        self._ensure_threads()
         self._inflight += 1
         self._in.put((plan, snapshot))
 

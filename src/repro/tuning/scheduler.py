@@ -5,21 +5,32 @@ emits a declarative ``MaintenancePlan`` (action, shard, forecast inputs,
 cost estimate) and routes it through three phases:
 
   plan    — here, between waves: telemetry snapshot, capacity guards,
-            controller decision, budget reservation;
+            controller decision, admission control, budget reservation;
   build   — ``tuning/executor.py``: the host-side unstack/retrain/restack
             against an immutable ``RouterSnapshot``. Sync mode runs it
             inline (the serving path stalls, as before); async mode runs it
-            on the executor's worker thread while serving continues;
+            on the executor's worker pool while serving continues;
   commit  — back on the serving thread at a wave boundary:
-            ``ShardedUpLIF.commit`` validates the epoch, replays the
-            op-log (rebase-on-commit) and swaps the pytree atomically.
+            ``ShardedUpLIF.commit`` validates the build's key interval
+            against intervening revisions, rebases the interval's op-log
+            (capped at ``commit_replay_cap`` ops per wave — a longer log
+            parks the commit in the draining state, advanced every wave
+            until the residual is empty) and swaps the pytree atomically.
+
+Admission is by **interval overlap + aggregate budget**: up to
+``max_concurrent_builds`` plans may be in flight at once as long as their
+key intervals are pairwise disjoint (the per-interval op-logs make
+disjoint rebases independent) and the sum of reserved cost estimates fits
+the token bucket. A plan whose interval overlaps an in-flight build or a
+draining commit defers to a later wave — it is never queued blindly.
 
 Budget accounting is **commit-time**: planning only *reserves* the learned
-cost estimate (so the scheduler does not over-commit future budget), and
-the token bucket is charged the measured serving-path cost when the delta
-actually lands. A build abandoned mid-flight — epoch conflict, degenerate
-action, build error — releases its reservation untouched, so abandoned
-work never eats the budget that real maintenance needs.
+cost estimate per plan (so the scheduler does not over-commit future
+budget), and the token bucket is charged the measured serving-path cost
+when the delta actually lands. A build abandoned mid-flight — interval
+conflict, degenerate action, build error — releases exactly its OWN
+reservation, exactly once, so abandoned work never eats (or refunds)
+budget that belongs to another queued plan.
 
 Capacity guards (forecast presize, forced absorb) and BMAT-type switches
 have no build phase: they are metadata/capacity-only and execute directly
@@ -38,7 +49,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.sharded import ShardedUpLIF
+from repro.core.sharded import ShardedUpLIF, intervals_overlap
 from repro.core.types import GMMState
 from repro.tuning.controller import (
     A_KEEP,
@@ -59,7 +70,9 @@ from repro.tuning.telemetry import Telemetry
 
 @dataclasses.dataclass
 class MaintenancePlan:
-    """Declarative maintenance record: everything build + commit need."""
+    """Declarative maintenance record: everything build + commit need.
+    ``build_id``/``key_lo``/``key_hi`` are stamped from the snapshot at
+    dispatch — they tie the plan to its per-interval op-log."""
 
     plan_id: int
     epoch: int                     # epoch of the snapshot the build reads
@@ -69,6 +82,9 @@ class MaintenancePlan:
     gmm: Optional[GMMState]        # forecast D_update for gap sizing
     cost_estimate: float           # reserved against the budget until commit
     forced: bool = False
+    build_id: int = -1
+    key_lo: int = 0
+    key_hi: int = 0
 
 
 @dataclasses.dataclass
@@ -82,6 +98,12 @@ class SchedulerConfig:
     cost_ewma: float = 0.5         # action-cost estimate update weight
     max_budget_s: float = 30.0     # token-bucket cap (bounds catch-up bursts)
     async_build: bool = False      # overlap builds with serving waves
+    max_concurrent_builds: int = 1  # disjoint-interval builds in flight
+    # commit pacing: replay at most this many logged ops per wave per
+    # commit (whole batches; None = unbounded = land in one wave). Bounds
+    # the serving-path cost of a commit like any other wave op.
+    commit_replay_cap: Optional[int] = None
+    max_drain_waves: int = 64      # force-finish a drain stuck this long
 
 
 class MaintenanceScheduler:
@@ -108,15 +130,30 @@ class MaintenanceScheduler:
         self.actions_log: List[dict] = []
         # plan/build/commit bookkeeping
         self.executor: Optional[MaintenanceExecutor] = (
-            MaintenanceExecutor() if config.async_build else None
+            MaintenanceExecutor(config.max_concurrent_builds)
+            if config.async_build
+            else None
         )
-        self._inflight: Optional[MaintenancePlan] = None
-        self._reserved = 0.0           # budget held by the in-flight plan
+        # plan_id -> in-flight plan / its budget reservation. Reservations
+        # are PER PLAN and released by pop: a conflicted build refunds
+        # exactly its own estimate exactly once, never a neighbor's.
+        self._inflight: Dict[int, MaintenancePlan] = {}
+        self._reservations: Dict[int, float] = {}
+        self._drain_waves: Dict[int, int] = {}  # build_id -> waves draining
+        self._fresh_drains: set = set()  # parked THIS wave: already paid
+                                         # their cap at commit acceptance
+        # build_id -> (action, serving-path seconds spent so far): a paced
+        # commit's TRUE cost spans its drain waves — folded into the
+        # learned estimate only when the drain completes, so admission
+        # learns the whole cost, not just the commit-wave slice
+        self._drain_actions: Dict[int, int] = {}
+        self._drain_spent: Dict[int, float] = {}
         self._next_plan_id = 0
         self._stale_plan_ids: set = set()  # abandoned; late results dropped
         self.n_planned = 0
-        self.n_committed = 0
-        self.n_conflicts = 0           # epoch-conflict discards
+        self.n_committed = 0           # commits accepted (incl. draining)
+        self.n_drained = 0             # paced commits that completed a drain
+        self.n_conflicts = 0           # interval-conflict discards
         self.n_abandoned = 0           # degenerate/failed/timed-out builds
         self.last_build_error: Optional[str] = None
 
@@ -127,17 +164,33 @@ class MaintenanceScheduler:
     def _estimated_cost(self, a: int) -> float:
         return self._cost_est.get(a, 0.05)  # optimistic until measured
 
+    @property
+    def _reserved(self) -> float:
+        """Budget held by ALL in-flight plans (aggregate reservation)."""
+        return sum(self._reservations.values())
+
     def _available(self) -> float:
-        """Spendable budget = bucket minus the in-flight reservation."""
+        """Spendable budget = bucket minus the in-flight reservations."""
         return self._budget - self._reserved
+
+    def _release(self, plan_id: int):
+        """Refund-once: pop the plan's own reservation; a second release
+        of the same plan (late result, double discard) is a no-op."""
+        self._reservations.pop(plan_id, None)
+        self._inflight.pop(plan_id, None)
+
+    def _fold_cost(self, a: int, dt: float):
+        """Fold a measured serving-path cost into the learned per-action
+        estimate (EWMA) without touching the bucket."""
+        w = self.cfg.cost_ewma
+        old = self._cost_est.get(a, dt)
+        self._cost_est[a] = (1 - w) * old + w * dt
 
     def _charge(self, a: int, dt: float):
         """Commit-time charge: deduct the measured serving-path cost and
         fold it into the learned per-action cost estimate."""
         self._budget = max(self._budget - dt, 0.0)
-        w = self.cfg.cost_ewma
-        old = self._cost_est.get(a, dt)
-        self._cost_est[a] = (1 - w) * old + w * dt
+        self._fold_cost(a, dt)
 
     def close(self):
         if self.executor is not None:
@@ -163,69 +216,125 @@ class MaintenanceScheduler:
             forced=forced,
         )
 
+    def _plan_shards(self, a: int, s: int) -> Tuple[int, ...]:
+        """Contiguous shard run a plan's build owns (merge takes a pair)."""
+        return (s, s + 1) if a == A_MERGE_SHARDS else (s,)
+
+    def _admit(self, index: ShardedUpLIF, a: int, s: int,
+               forced: bool) -> bool:
+        """Interval-overlap + budget admission: a plan runs only when a
+        worker slot is free, its key interval is disjoint from every
+        in-flight build AND draining commit, and (unless forced) its cost
+        estimate fits the unreserved budget."""
+        if len(self._inflight) >= self.cfg.max_concurrent_builds and (
+            self.executor is not None
+        ):
+            return False
+        shards = self._plan_shards(a, s)
+        if shards[-1] >= index.n_shards:
+            return False
+        lo, hi = index._shard_interval(shards[0], shards[-1])
+        for b_lo, b_hi in index.active_intervals():
+            if intervals_overlap(lo, hi, b_lo, b_hi):
+                return False
+        return forced or self._estimated_cost(a) <= self._available()
+
     def _dispatch(self, index: ShardedUpLIF, plan: MaintenancePlan) -> bool:
         """Run one plan through build + commit. Sync: inline (stalls the
         wave, charged at its commit). Async: submit and return — the
         estimate stays reserved until the build lands or is abandoned.
         Returns whether the index changed NOW (sync commit)."""
-        snapshot = index.snapshot()
+        snapshot = index.snapshot(self._plan_shards(plan.action, plan.shard))
         plan.epoch = snapshot.epoch
+        plan.build_id = snapshot.build_id
+        plan.key_lo, plan.key_hi = snapshot.key_lo, snapshot.key_hi
         if self.executor is not None:
             self.executor.submit(plan, snapshot)
-            self._inflight = plan
-            self._reserved = plan.cost_estimate
+            self._inflight[plan.plan_id] = plan
+            self._reservations[plan.plan_id] = plan.cost_estimate
             return False
         t0 = time.perf_counter()
         try:
             delta = build_plan(plan, snapshot)
         except Exception:
-            index.discard_build()
+            index.discard_build(plan.build_id)
             self.n_abandoned += 1
             raise
         if delta is None:
-            index.discard_build()
+            # degenerate action: the wave still paid snapshot + build, so
+            # the bucket is deducted (or the controller could retry the
+            # same free no-op every decide wave) — but an abandoned
+            # build's cost never pollutes the learned estimate
+            index.discard_build(plan.build_id)
             self.n_abandoned += 1
+            self._budget = max(
+                self._budget - (time.perf_counter() - t0), 0.0
+            )
             return False
+        # sync commits are never paced: the build already stalled the wave,
+        # so the replay is tiny (nothing arrived mid-build)
         ok = index.commit(delta)
         if ok:
             self._charge(plan.action, time.perf_counter() - t0)
             self.n_committed += 1
         else:
             self.n_conflicts += 1
+            self._budget = max(
+                self._budget - (time.perf_counter() - t0), 0.0
+            )
         return ok
 
-    def _handle_result(self, index: ShardedUpLIF, res) -> bool:
+    def _handle_result(
+        self, index: ShardedUpLIF, res,
+        replay_cap: Optional[int] = None,
+    ) -> bool:
         """Commit (or abandon) one finished async build on the serving
-        thread. Releasing the reservation without a charge IS the refund
-        path for abandoned work."""
-        if res.plan.plan_id in self._stale_plan_ids:
+        thread. Releasing the plan's reservation without a charge IS the
+        refund path for abandoned work — and it releases ONLY this plan's
+        hold, other queued plans keep theirs."""
+        plan = res.plan
+        if plan.plan_id in self._stale_plan_ids:
             # a build that outlived its drain timeout: its op-log is gone
             # (possibly replaced by a newer build's) — committing it would
             # replay the wrong log, so it is dropped unconditionally
-            self._stale_plan_ids.discard(res.plan.plan_id)
+            self._stale_plan_ids.discard(plan.plan_id)
             return False
-        self._inflight = None
-        self._reserved = 0.0
+        self._release(plan.plan_id)
         if res.error is not None or res.delta is None:
-            index.discard_build()
+            index.discard_build(plan.build_id)
             self.n_abandoned += 1
             if res.error is not None:
                 # async must not silently degrade to never-tune: keep the
                 # reason visible (stats) and warn once per failure
                 self.last_build_error = repr(res.error)
                 warnings.warn(
-                    f"maintenance build failed ({ACTION_NAMES[res.plan.action]}"
-                    f" shard {res.plan.shard}): {res.error!r}",
+                    f"maintenance build failed ({ACTION_NAMES[plan.action]}"
+                    f" shard {plan.shard}): {res.error!r}",
                     RuntimeWarning,
                 )
             return False
         t0 = time.perf_counter()
-        ok = index.commit(res.delta)
+        ok = index.commit(res.delta, replay_cap=replay_cap)
         if ok:
-            # the serving path paid only the commit (row write + replay);
-            # the build ran off-path, so only the commit hits the bucket
-            self._charge(res.plan.action, time.perf_counter() - t0)
+            # the serving path paid only the commit (row write + capped
+            # replay); the build ran off-path, so only that hits the bucket
+            dt = time.perf_counter() - t0
             self.n_committed += 1
+            bid = res.delta.build_id
+            if bid in index.draining_builds():
+                # parked: deduct the slice now, but fold the estimate only
+                # when the drain completes — the action's true serving-path
+                # cost is the commit slice PLUS every drain wave's replay
+                self._budget = max(self._budget - dt, 0.0)
+                self._drain_actions[bid] = plan.action
+                self._drain_spent[bid] = dt
+                self._drain_waves[bid] = 0
+                # the commit already replayed this wave's cap: the first
+                # advance_drain belongs to the NEXT wave, or the commit
+                # wave would replay up to 2x the documented bound
+                self._fresh_drains.add(bid)
+            else:
+                self._charge(plan.action, dt)
         else:
             self.n_conflicts += 1
         return ok
@@ -235,28 +344,99 @@ class MaintenanceScheduler:
         if self.executor is None:
             return 0
         return sum(
-            self._handle_result(index, res) for res in self.executor.poll()
+            self._handle_result(
+                index, res, replay_cap=self.cfg.commit_replay_cap
+            )
+            for res in self.executor.poll()
         )
 
+    def _advance_drains(self, index: ShardedUpLIF) -> int:
+        """Advance every draining commit by one capped replay step; a
+        drain stuck past ``max_drain_waves`` (arrivals outpacing the cap)
+        finishes unbounded — pacing bounds the common case, the escape
+        hatch bounds drain lifetime. Replay is serving-thread work, so
+        the measured time is charged to the token bucket like every
+        other directly-executed maintenance step."""
+        done = 0
+        for bid in index.draining_builds():
+            if bid in self._fresh_drains:
+                # parked at THIS wave's commit: its cap is already spent
+                self._fresh_drains.discard(bid)
+                continue
+            age = self._drain_waves.get(bid, 0) + 1
+            self._drain_waves[bid] = age
+            cap = (
+                None
+                if age > self.cfg.max_drain_waves
+                else self.cfg.commit_replay_cap
+            )
+            d0 = time.perf_counter()
+            completed = index.advance_drain(bid, cap)
+            dt = time.perf_counter() - d0
+            self._budget = max(self._budget - dt, 0.0)
+            spent = self._drain_spent.get(bid, 0.0) + dt
+            self._drain_spent[bid] = spent
+            if completed:
+                done += 1
+                a = self._drain_actions.pop(bid, None)
+                if a is not None:
+                    # the action's learned cost is its WHOLE serving-path
+                    # bill (commit slice + all drain waves)
+                    self._fold_cost(a, self._drain_spent.pop(bid))
+        live = set(index.draining_builds())
+        for stale in set(self._drain_waves) - live:
+            # completed above, or aborted mid-drain (intersecting
+            # revision): drop the bookkeeping. An aborted build's partial
+            # cost must not pollute the learned estimate — the bucket
+            # already paid for the real time spent
+            self._drain_waves.pop(stale, None)
+            self._drain_actions.pop(stale, None)
+            self._drain_spent.pop(stale, None)
+        self._fresh_drains &= live
+        self.n_drained += done
+        return done
+
     def drain(self, index: ShardedUpLIF, timeout: float = 30.0) -> int:
-        """Block until in-flight builds finish and commit them (shutdown /
-        test convergence helper; serving uses the non-blocking poll). A
-        build that outlives the timeout is ABANDONED: its op-log is
-        released (tracking would otherwise grow unbounded and block every
-        future snapshot) and its plan is marked stale so a late result can
-        never commit against a newer build's log."""
-        if self.executor is None:
-            return 0
-        n = sum(
-            self._handle_result(index, res)
-            for res in self.executor.wait(timeout)
-        )
-        if self._inflight is not None:
-            self._stale_plan_ids.add(self._inflight.plan_id)
-            self._inflight = None
-            self._reserved = 0.0
-            index.discard_build()
-            self.n_abandoned += 1
+        """Block until in-flight builds finish and commit them fully —
+        paced drains included (shutdown / test convergence helper; serving
+        uses the non-blocking poll). A build that outlives the timeout is
+        ABANDONED: its op-log is released (it would otherwise grow
+        unbounded and block every future overlapping snapshot) and its
+        plan is marked stale so a late result can never commit against a
+        newer build's log."""
+        n = 0
+        if self.executor is not None:
+            n = sum(
+                self._handle_result(index, res, replay_cap=None)
+                for res in self.executor.wait(timeout)
+            )
+            for plan in list(self._inflight.values()):
+                self._stale_plan_ids.add(plan.plan_id)
+                self._release(plan.plan_id)
+                index.discard_build(plan.build_id)
+                self.n_abandoned += 1
+        # land anything still parked in the draining state, unpaced —
+        # with the same completion accounting the paced path keeps
+        while index.draining:
+            progressed = 0
+            for bid in index.draining_builds():
+                d0 = time.perf_counter()
+                if index.advance_drain(bid, None):
+                    progressed += 1
+                    self.n_drained += 1
+                    a = self._drain_actions.pop(bid, None)
+                    if a is not None:
+                        self._fold_cost(
+                            a,
+                            self._drain_spent.pop(bid, 0.0)
+                            + time.perf_counter() - d0,
+                        )
+            if progressed == 0:
+                break  # aborted drains vanish without completing
+        self._drain_waves.clear()
+        self._fresh_drains.clear()
+        self._drain_actions.clear()
+        self._drain_spent.clear()
         return n
 
     # -- the loop ------------------------------------------------------------
@@ -276,7 +456,9 @@ class MaintenanceScheduler:
         decide = self._wave % self.cfg.decide_every == 0
 
         t0 = time.perf_counter()
+        replayed0 = index.n_replayed_ops
         committed = self._commit_finished(index)
+        drained = self._advance_drains(index)
 
         snap = self.telemetry.snapshot(index)
         heat = (
@@ -358,27 +540,27 @@ class MaintenanceScheduler:
                 state, mask, explore=self.cfg.explore,
                 snap=snap, s=s, heat=heat,
             )
-        elif not presized and committed == 0:
+        elif not presized and committed == 0 and drained == 0:
             return None
 
         # -- translate the decision into a plan / direct action -------------
         changed = False
         if a in BUILD_ACTIONS:
-            if self._inflight is not None:
-                # one build at a time: the op-log supports a single rebase
+            if a == A_MERGE_SHARDS:
+                s_apply = self.controller.coldest_pair(snap)
+            if not self._admit(index, a, s_apply, forced):
+                # no free worker slot, interval overlaps an in-flight
+                # build / draining commit, or unaffordable — defer
                 a, deferred = A_KEEP, True
-            elif not forced and self._estimated_cost(a) > self._available():
-                a, deferred = A_KEEP, True  # can't afford it yet — defer
             else:
-                if a == A_MERGE_SHARDS:
-                    s_apply = self.controller.coldest_pair(snap)
                 self.controller.action_counts[a] += 1
                 changed = self._dispatch(
                     index, self._make_plan(a, s_apply, forced)
                 )
         elif a == A_SWITCH_BMAT:
-            if self._inflight is not None:
-                # the switch bumps the epoch and would void the build
+            if self._inflight or index.active_intervals():
+                # the switch revises the WHOLE keyspace: it would void
+                # every in-flight build and draining commit
                 a, deferred = A_KEEP, True
             elif self._estimated_cost(a) > self._available():
                 a, deferred = A_KEEP, True
@@ -405,7 +587,10 @@ class MaintenanceScheduler:
             "forced": forced,
             "presized": presized,
             "committed": committed,
-            "inflight": self._inflight is not None,
+            "drained": drained,
+            "draining": len(index.draining_builds()),
+            "replayed_ops": index.n_replayed_ops - replayed0,
+            "inflight": len(self._inflight),
             "cost_s": dt,
             "budget_s": self._budget,
             "reserved_s": self._reserved,

@@ -1,10 +1,14 @@
-"""Plan/build/commit maintenance pipeline (ISSUE 3): versioned router
-state (snapshot / epoch / commit / rebase-on-commit), the background
-executor, sync-vs-async semantic equivalence under a distribution shift,
-commit-time budget accounting, and torn-read safety of the atomic swap."""
+"""Plan/build/commit maintenance pipeline (ISSUE 3 + ISSUE 4): versioned
+router state (snapshot / per-interval conflict validation / commit /
+rebase-on-commit), concurrent disjoint builds with paced (draining)
+commits, the background executor pool, sync-vs-async semantic equivalence
+under a distribution shift, commit-time budget accounting with per-plan
+refund-once reservations, and torn-read safety of the atomic swap."""
+import hashlib
 import threading
 import time
 
+import jax
 import numpy as np
 
 import repro.core  # noqa: F401 — x64
@@ -12,10 +16,12 @@ from repro.core import ShardedUpLIF
 from repro.core.sharded import retrain_shell_fitted
 from repro.core.uplif import UpLIFConfig
 from repro.tuning import (
+    A_MERGE_SHARDS,
     A_RETRAIN_SHARD,
     A_SPLIT_SHARD,
     ControllerConfig,
     ForecastConfig,
+    MaintenanceExecutor,
     MaintenancePlan,
     QTableStore,
     SchedulerConfig,
@@ -87,17 +93,19 @@ def test_commit_split_delta_and_ranges():
     assert np.all(np.diff(ks) > 0)
 
 
-def test_epoch_conflict_discards_build():
-    """A structural revision between snapshot and commit invalidates the
-    delta: commit refuses it, counts a discard, and the index keeps the
-    (correct) live state."""
+def test_interval_conflict_discards_build():
+    """A structural revision that INTERSECTS a build's key interval
+    invalidates it: commit refuses the delta, counts a discard, and the
+    index keeps the (correct) live state. A revision on a DISJOINT
+    interval must NOT conflict — that independence is what lets disjoint
+    shard rebuilds overlap (ISSUE 4)."""
     keys, idx = _router()
     rng = np.random.default_rng(2)
     new = np.setdiff1d(rng.integers(0, 1 << 48, 3000).astype(np.int64), keys)
     idx.insert(new, new + 1)
-    snap = idx.snapshot()
+    snap = idx.snapshot(shards=(0,))
     delta = build(_plan(A_RETRAIN_SHARD, 0), snap)
-    idx.retrain_shard(1)          # direct structural op bumps the epoch
+    idx.retrain_shard(0)          # direct revision of the SAME interval
     assert not idx.commit(delta)  # stale build discarded
     assert idx.n_commits == 0 and idx.n_discards == 1
     assert not idx._tracking      # op-log released for the next build
@@ -105,9 +113,14 @@ def test_epoch_conflict_discards_build():
     assert f.all() and np.array_equal(v, new + 1)
     f, v = idx.lookup(keys)
     assert f.all() and np.array_equal(v, keys * 2)
-    # the next snapshot/build/commit round succeeds
-    snap = idx.snapshot()
-    assert idx.commit(build(_plan(A_RETRAIN_SHARD, 0), snap))
+    # a disjoint revision leaves a build committable: only overlap voids it
+    snap = idx.snapshot(shards=(0,))
+    delta = build(_plan(A_RETRAIN_SHARD, 0), snap)
+    idx.retrain_shard(2)          # disjoint interval — no conflict
+    assert idx.commit(delta)
+    assert idx.n_commits == 1
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 1)
 
 
 def test_sync_mode_runs_the_same_pipeline():
@@ -212,7 +225,7 @@ def test_abandoned_build_refunds_budget():
     assert not sched._dispatch(idx, plan)      # async: submitted, not done
     assert sched._reserved == 1.5
     assert sched._available() == 0.5           # reservation blocks replans
-    idx.retrain_shard(1)                       # epoch bump → conflict
+    idx.retrain_shard(0)                       # same-interval revision
     committed = sched.drain(idx)               # build lands, commit refuses
     assert committed == 0
     assert sched.n_conflicts == 1 and sched.n_committed == 0
@@ -271,7 +284,7 @@ def test_drain_timeout_abandons_and_drops_late_result(monkeypatch):
     monkeypatch.setattr(executor_mod, "build", slow_build)
     sched._dispatch(idx, sched._make_plan(A_RETRAIN_SHARD, 0, forced=False))
     assert sched.drain(idx, timeout=0.05) == 0   # too slow: abandoned
-    assert sched._inflight is None and sched._reserved == 0.0
+    assert not sched._inflight and sched._reserved == 0.0
     assert not idx._tracking                      # op-log released
     assert sched.n_abandoned == 1
     # ops arriving after the abandonment — a late commit would lose them
@@ -396,6 +409,223 @@ def test_qtable_store_roundtrip_and_nearest(tmp_path):
     c4 = ShardTuningController()
     assert fresh.warm_start(c4, (0.04, 1.1, 0.01))
     assert c4.q[(2,) * 7][A_SPLIT_SHARD] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 4: concurrent disjoint builds + paced (draining) commits
+# ---------------------------------------------------------------------------
+
+
+def _digest(idx, keys: np.ndarray) -> str:
+    """Order-independent content digest (found flags + values) — same
+    construction as the bench's cross-policy equivalence check."""
+    keys = np.unique(keys)
+    h = hashlib.sha256()
+    for a in range(0, len(keys), 65536):
+        f, v = idx.lookup(keys[a : a + 65536])
+        h.update(f.astype(np.uint8).tobytes())
+        h.update(np.where(f, v, 0).astype(np.int64).tobytes())
+    return h.hexdigest()
+
+
+def test_threaded_concurrent_builds_paced_commits():
+    """ISSUE 4 stress: reader threads hammer lookups while TWO builds on
+    disjoint shard intervals run on the executor pool and their commits
+    drain under a small replay cap across several rounds. Asserts no torn
+    reads (probe mapping never corrupted), read-your-writes for every
+    acknowledged insert (no lost ops — even for ops parked in a draining
+    commit's log), and that the final content digest equals a sync-mode
+    twin run of the same op tape."""
+    rng = np.random.default_rng(41)
+    keys = make_keys(24_000, 41)
+    # the recorded op tape both runs replay
+    base = int(keys.max())
+    tape = [
+        np.unique((base + rng.integers(1, 1 << 30, 1200)).astype(np.int64))
+        for _ in range(8)
+    ]
+
+    idx = ShardedUpLIF(keys, keys * 2, CFG, n_shards=4)
+    probe = keys[:: len(keys) // 512][:512]
+    want = probe * 2
+    stop = threading.Event()
+    failures = []
+    acked = []
+
+    def reader():
+        while not stop.is_set():
+            try:
+                f, v = idx.lookup(probe)
+                if not (f.all() and np.array_equal(v, want)):
+                    failures.append("probe mismatch (torn read)")
+                    return
+                if acked:
+                    ak, av = acked[-1]
+                    f, v = idx.lookup(ak)
+                    if not (f.all() and np.array_equal(v, av)):
+                        failures.append("acked insert vanished")
+                        return
+            except Exception as e:  # noqa: BLE001 — any tear is a failure
+                failures.append(repr(e))
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    executor = MaintenanceExecutor(n_workers=2)
+    try:
+        for round_, new in enumerate(tape):
+            if round_ % 2 == 0:
+                # two builds on DISJOINT intervals, genuinely concurrent
+                snap_a = idx.snapshot(shards=(0,))
+                snap_c = idx.snapshot(shards=(2,))
+                assert len(idx.active_intervals()) == 2
+                executor.submit(_plan(A_RETRAIN_SHARD, 0), snap_a)
+                executor.submit(_plan(A_RETRAIN_SHARD, 2), snap_c)
+            # acknowledged AFTER the snapshots: only the per-interval
+            # op-logs carry these across the commits
+            idx.insert(new, new + 1)
+            acked.append((new, new + 1))
+            if round_ % 2 == 1:
+                # two rounds of ops are now logged against each build:
+                # the capped commit parks in the draining state and the
+                # readers keep probing it mid-drain
+                for res in executor.wait(timeout=30.0):
+                    assert res.error is None
+                    assert idx.commit(res.delta, replay_cap=256)
+                idx.advance_drains(256)
+                # finish the drains before the next round's snapshots
+                # (their intervals overlap these)
+                while idx.draining:
+                    idx.advance_drains(256)
+        while idx.draining:
+            assert idx.advance_drains(None) > 0
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        executor.close()
+    assert not failures, failures
+    assert idx.n_commits >= 6 and idx.n_discards == 0
+
+    # sync-mode twin: same tape, inline maintenance — contents must match
+    twin = ShardedUpLIF(keys, keys * 2, CFG, n_shards=4)
+    for round_, new in enumerate(tape):
+        twin.insert(new, new + 1)
+        if round_ % 2 == 0:
+            twin.retrain_shard(0)
+            twin.retrain_shard(2)
+    all_keys = np.concatenate([keys] + tape)
+    assert _digest(idx, all_keys) == _digest(twin, all_keys)
+
+
+def test_replay_cap_differential_byte_identical():
+    """Maximal pacing (commit_replay_cap=1: one logged batch per wave,
+    drained across many waves) and unbounded replay (the whole log in one
+    wave) must produce BYTE-IDENTICAL final stacked pytrees under the same
+    recorded workload trace — pacing changes WHEN replay work happens,
+    never what it computes."""
+    def run(replay_cap):
+        keys = make_keys(16_000, 17)
+        idx = ShardedUpLIF(keys, keys * 2, CFG, n_shards=2)
+        rng = np.random.default_rng(18)
+        snap = idx.snapshot(shards=(0,))
+        # the recorded trace: inserts and deletes logged against the build
+        for _ in range(5):
+            new = np.setdiff1d(
+                rng.integers(0, 1 << 48, 800).astype(np.int64), keys
+            )
+            idx.insert(new, new + 3)
+            idx.delete(rng.choice(keys, 120, replace=False))
+        delta = build(_plan(A_RETRAIN_SHARD, 0), snap)
+        assert idx.commit(delta, replay_cap=replay_cap)
+        waves = 0
+        while idx.draining:
+            idx.advance_drains(replay_cap)
+            waves += 1
+            assert waves < 100, "drain failed to converge"
+        return idx, waves
+
+    a, waves_a = run(None)   # unbounded: lands in the commit wave
+    b, waves_b = run(1)      # maximal pacing: one batch per wave
+    assert waves_a == 0 and waves_b >= 5   # pacing actually paced
+    assert a.n_commits == b.n_commits == 1
+    la = jax.tree_util.tree_leaves(a.state)
+    lb = jax.tree_util.tree_leaves(b.state)
+    assert len(la) == len(lb)
+    for xa, xb in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    np.testing.assert_array_equal(a.boundaries, b.boundaries)
+
+
+def test_budget_refund_once_with_second_plan_queued():
+    """Regression (ISSUE 4 satellite): with several plans in flight, a
+    conflicted build must refund exactly ITS OWN reservation exactly once
+    — the old scheduler zeroed the aggregate reservation on any result,
+    double-refunding whenever a second plan was still queued."""
+    keys, idx = _router()
+    rng = np.random.default_rng(9)
+    new = np.setdiff1d(rng.integers(0, 1 << 48, 3000).astype(np.int64), keys)
+    idx.insert(new, new + 1)
+    tuner = SelfTuner(
+        TunerConfig(
+            scheduler=SchedulerConfig(
+                async_build=True, max_concurrent_builds=2
+            )
+        )
+    ).attach(idx)
+    sched = tuner.scheduler
+    sched._budget = 4.0
+    sched._cost_est[A_RETRAIN_SHARD] = 1.5
+    plan_a = sched._make_plan(A_RETRAIN_SHARD, 0, forced=False)
+    plan_b = sched._make_plan(A_RETRAIN_SHARD, 2, forced=False)
+    sched._dispatch(idx, plan_a)
+    sched._dispatch(idx, plan_b)          # disjoint interval: admitted
+    assert sched._reserved == 3.0         # both plans hold their estimate
+    assert sched._available() == 1.0
+    idx.retrain_shard(0)                  # conflicts plan A only
+    results = {r.plan.plan_id: r for r in sched.executor.wait(30.0)}
+    assert sched._handle_result(idx, results[plan_a.plan_id]) is False
+    assert sched.n_conflicts == 1
+    # refund-once: ONLY plan A's reservation released, B still holds 1.5
+    assert sched._reserved == 1.5
+    assert sched._budget == 4.0           # conflicted build never charged
+    # a duplicate release of the same plan must be a no-op, not a refund
+    sched._release(plan_a.plan_id)
+    assert sched._reserved == 1.5
+    assert sched._handle_result(idx, results[plan_b.plan_id]) is True
+    assert sched._reserved == 0.0 and sched.n_committed == 1
+    assert sched._budget < 4.0            # B charged its measured cost
+    f, v = idx.lookup(new)
+    assert f.all() and np.array_equal(v, new + 1)
+    tuner.close()
+
+
+def test_scheduler_admission_by_overlap_and_slots():
+    """The scheduler defers a plan whose interval overlaps an in-flight
+    build or when the worker pool is full — and admits disjoint plans up
+    to max_concurrent_builds."""
+    keys, idx = _router(shards=4)
+    tuner = SelfTuner(
+        TunerConfig(
+            scheduler=SchedulerConfig(
+                async_build=True, max_concurrent_builds=2
+            )
+        )
+    ).attach(idx)
+    sched = tuner.scheduler
+    sched._budget = 10.0
+    assert sched._admit(idx, A_RETRAIN_SHARD, 1, forced=False)
+    sched._dispatch(idx, sched._make_plan(A_RETRAIN_SHARD, 1, forced=False))
+    # overlap: same shard, and a merge spanning it, are deferred
+    assert not sched._admit(idx, A_RETRAIN_SHARD, 1, forced=False)
+    assert not sched._admit(idx, A_MERGE_SHARDS, 0, forced=False)  # (0,1)
+    # disjoint shard admitted — then the pool (2 slots) is full
+    assert sched._admit(idx, A_RETRAIN_SHARD, 3, forced=False)
+    sched._dispatch(idx, sched._make_plan(A_RETRAIN_SHARD, 3, forced=False))
+    assert not sched._admit(idx, A_RETRAIN_SHARD, 2, forced=False)
+    assert sched.drain(idx) == 2 and idx.n_commits == 2
+    tuner.close()
 
 
 def test_selftuner_signature_and_persist(tmp_path):

@@ -1,0 +1,232 @@
+"""Property/stress harness for the versioned keyspace router (ISSUE 4).
+
+Random interleavings of insert / delete / lookup / range / snapshot /
+commit / advance-drain are checked op by op against a sorted-dict oracle:
+whatever the maintenance pipeline is doing — builds in flight on disjoint
+intervals, commits parked mid-drain, conflicted builds being discarded —
+a lookup must always return exactly what the oracle holds. This pins the
+core guarantee of the draining-commit design: the OLD rows serve every
+read until the rebuilt shells have fully caught up, so pacing never
+creates a window where acknowledged writes are invisible.
+
+Strategies go through ``tests/_hypothesis_compat``: with hypothesis
+installed (CI runs ``--hypothesis-seed=0``) each case explores many
+random op tapes; without it the shim runs the deterministic boundary grid
+of the same oracle checks.
+"""
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — x64
+from repro.core import ShardedUpLIF
+from repro.core.sharded import intervals_overlap
+from repro.core.uplif import UpLIFConfig
+from repro.tuning import A_MERGE_SHARDS, A_RETRAIN_SHARD, A_SPLIT_SHARD
+from repro.tuning import MaintenancePlan, build
+from tests._hypothesis_compat import HealthCheck, given, settings, st
+from tests.conftest import make_keys
+
+CFG = UpLIFConfig(batch_bucket=256)
+KEY_HI = 1 << 40  # compact domain: collisions with live keys are common
+
+
+def _plan(action, shard):
+    return MaintenancePlan(
+        plan_id=0, epoch=-1, wave=0, action=action, shard=shard,
+        gmm=None, cost_estimate=0.0,
+    )
+
+
+class _Oracle:
+    """The router spec: a plain dict plus the router under test."""
+
+    def __init__(self, n_keys, n_shards, rng):
+        keys = make_keys(n_keys, int(rng.integers(1 << 30)), hi=KEY_HI)
+        vals = keys * 3 + 1
+        self.idx = ShardedUpLIF(keys, vals, CFG, n_shards=n_shards)
+        self.d = dict(zip(keys.tolist(), vals.tolist()))
+        self.rng = rng
+        self.builds = {}  # build_id -> delta (ready to commit)
+
+    # -- mutations (mirrored into the dict) --------------------------------
+    def insert(self, n):
+        keys = self.rng.integers(0, KEY_HI, n).astype(np.int64)
+        keys = np.unique(keys)
+        vals = keys + int(self.rng.integers(1, 1 << 20))
+        self.idx.insert(keys, vals)
+        self.d.update(zip(keys.tolist(), vals.tolist()))
+
+    def delete(self, n):
+        live = np.fromiter(self.d, dtype=np.int64, count=len(self.d))
+        pick = self.rng.choice(live, min(n, len(live)), replace=False)
+        miss = self.rng.integers(0, KEY_HI, 4).astype(np.int64)
+        keys = np.unique(np.concatenate([pick, miss]))
+        self.idx.delete(keys)
+        for k in keys.tolist():
+            self.d.pop(k, None)
+
+    # -- maintenance --------------------------------------------------------
+    def start_build(self):
+        """Snapshot + build on a random shard whose interval is free."""
+        action = [A_RETRAIN_SHARD, A_SPLIT_SHARD, A_MERGE_SHARDS][
+            int(self.rng.integers(3))
+        ]
+        s = int(self.rng.integers(self.idx.n_shards))
+        shards = (s, s + 1) if action == A_MERGE_SHARDS else (s,)
+        if shards[-1] >= self.idx.n_shards:
+            return
+        lo, hi = self.idx._shard_interval(shards[0], shards[-1])
+        if any(
+            intervals_overlap(lo, hi, b_lo, b_hi)
+            for b_lo, b_hi in self.idx.active_intervals()
+        ):
+            return  # overlap: admission would defer this plan
+        snap = self.idx.snapshot(shards=shards)
+        delta = build(_plan(action, s), snap)
+        if delta is None:
+            self.idx.discard_build(snap.build_id)
+        else:
+            self.builds[snap.build_id] = delta
+
+    def commit_one(self, cap):
+        if not self.builds:
+            return
+        bid = sorted(self.builds)[0]
+        self.idx.commit(self.builds.pop(bid), replay_cap=cap)
+
+    def direct_retrain(self):
+        """A direct structural op: conflicts any overlapping build/drain —
+        the router must discard those, never corrupt."""
+        s = int(self.rng.integers(self.idx.n_shards))
+        lo, hi = self.idx._shard_interval(s)
+        overlapped = [
+            b for b, d in list(self.builds.items())
+            if intervals_overlap(lo, hi, d.key_lo, d.key_hi)
+        ]
+        self.idx.retrain_shard(s)
+        for b in overlapped:  # their eventual commit must now be refused
+            assert not self.idx.commit(self.builds.pop(b))
+
+    # -- checks --------------------------------------------------------------
+    def check_probe(self):
+        live = np.fromiter(self.d, dtype=np.int64, count=len(self.d))
+        pick = self.rng.choice(live, min(128, len(live)), replace=False)
+        gone = np.setdiff1d(
+            self.rng.integers(0, KEY_HI, 32).astype(np.int64), live
+        )
+        f, v = self.idx.lookup(pick)
+        assert f.all(), "live key not found"
+        want = np.asarray([self.d[int(k)] for k in pick], dtype=np.int64)
+        np.testing.assert_array_equal(v, want)
+        f, _ = self.idx.lookup(gone)
+        assert not f.any(), "dead/unknown key found"
+
+    def check_range(self):
+        live = np.sort(np.fromiter(self.d, dtype=np.int64, count=len(self.d)))
+        a = int(self.rng.integers(len(live) - 1))
+        lo, hi = int(live[a]), int(live[min(a + 40, len(live) - 1)])
+        ks, vs = self.idx.range_query(lo, hi, max_out=256)
+        want_k = live[(live >= lo) & (live <= hi)][:256]
+        np.testing.assert_array_equal(ks, want_k)
+        want_v = np.asarray([self.d[int(k)] for k in want_k], dtype=np.int64)
+        np.testing.assert_array_equal(vs, want_v)
+
+    def check_final(self):
+        while self.builds:
+            self.commit_one(None)
+        while self.idx.draining:
+            if self.idx.advance_drains(None) == 0:
+                break
+        assert not self.idx.draining and not self.idx._tracking
+        live = np.sort(np.fromiter(self.d, dtype=np.int64, count=len(self.d)))
+        f, v = self.idx.lookup(live)
+        assert f.all()
+        want = np.asarray([self.d[int(k)] for k in live], dtype=np.int64)
+        np.testing.assert_array_equal(v, want)
+        assert self.idx.size == len(self.d)
+
+
+@settings(
+    max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    seed=st.integers(min_value=0, max_value=10_000),
+    cap=st.sampled_from([1, 64, None]),
+)
+def test_router_equivalent_to_oracle(seed, cap):
+    """Random op tape (inserts, deletes, builds, paced commits, drain
+    steps, direct conflicts) — the router answers every probe exactly like
+    the dict oracle at EVERY step, including mid-drain."""
+    rng = np.random.default_rng(seed)
+    o = _Oracle(n_keys=3000, n_shards=3, rng=rng)
+    for step in range(14):
+        op = int(rng.integers(8))
+        if op == 0:
+            o.insert(int(rng.integers(1, 400)))
+        elif op == 1:
+            o.delete(int(rng.integers(1, 120)))
+        elif op == 2:
+            o.start_build()
+        elif op == 3:
+            o.commit_one(cap)
+        elif op == 4:
+            for bid in o.idx.draining_builds():
+                o.idx.advance_drain(bid, cap)
+        elif op == 5 and step % 4 == 0:
+            o.direct_retrain()
+        elif op == 6:
+            o.check_range()
+        else:
+            o.insert(int(rng.integers(1, 200)))
+            o.delete(int(rng.integers(1, 60)))
+        o.check_probe()
+    o.check_final()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1_000))
+def test_mid_drain_commit_interleaving(seed):
+    """Focused mid-drain scenario: a maximally paced commit (cap=1) stays
+    parked for many waves while inserts/deletes keep landing IN its
+    interval; every interleaved probe must read its own writes, and the
+    final swap must lose nothing."""
+    rng = np.random.default_rng(seed)
+    o = _Oracle(n_keys=2500, n_shards=2, rng=rng)
+    snap = o.idx.snapshot(shards=(0,))
+    for _ in range(4):  # ops logged against the build
+        o.insert(200)
+        o.delete(40)
+    delta = build(_plan(A_RETRAIN_SHARD, 0), snap)
+    assert o.idx.commit(delta, replay_cap=1)
+    assert o.idx.draining
+    steps = 0
+    while o.idx.draining:
+        o.insert(int(rng.integers(1, 80)))   # keeps appending to the log
+        o.delete(int(rng.integers(1, 20)))
+        o.check_probe()                      # read-your-writes mid-drain
+        o.idx.advance_drains(int(rng.integers(1, 200)))
+        steps += 1
+        if steps > 200:
+            o.idx.advance_drains(None)       # arrivals outpaced the cap
+    assert o.idx.n_commits == 1
+    o.check_final()
+
+
+def test_snapshot_overlap_rejected():
+    """Two builds may not own intersecting keyspace: the second snapshot
+    must be refused outright (the scheduler admission-controls, the router
+    enforces)."""
+    rng = np.random.default_rng(3)
+    o = _Oracle(n_keys=2000, n_shards=4, rng=rng)
+    o.idx.snapshot(shards=(1,))
+    with pytest.raises(RuntimeError):
+        o.idx.snapshot(shards=(1,))
+    with pytest.raises(RuntimeError):
+        o.idx.snapshot(shards=(0, 1))
+    with pytest.raises(RuntimeError):
+        o.idx.snapshot()  # whole-keyspace overlaps everything
+    o.idx.snapshot(shards=(3,))  # disjoint: fine
+    assert len(o.idx.active_intervals()) == 2
+    o.idx.discard_build()
+    assert not o.idx._tracking
