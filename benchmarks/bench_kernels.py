@@ -7,13 +7,55 @@ import numpy as np
 
 import repro.core  # x64
 from benchmarks.common import emit, time_batches
+from repro.core import fops
 from repro.core.radix_spline import build_radix_spline
+from repro.core.uplif import UpLIF, UpLIFConfig
 from repro.kernels import ops
+
+LOCATE_STRATEGIES = ("binsearch", "spline", "fused")
+
+
+def _locate_strategy_rows(n_keys: int, q: int, seed: int):
+    """fops-vs-fused locate comparison: ONE index state, three jitted
+    lookup programs that differ only in the static locate strategy, so the
+    rows measure exactly the search-plan swap (binsearch = B+Tree bisect,
+    spline = jnp predict+window bisect, fused = Pallas kernel — interpret
+    mode off-TPU, so treat CPU ratios as a wiring proof, not TPU speedup)."""
+    rng = np.random.default_rng(seed)
+    keys = np.unique(rng.integers(0, 1 << 48, n_keys).astype(np.int64))
+    idx = UpLIF(keys, keys + 1, UpLIFConfig(locate="spline"))
+    queries = jnp.asarray(rng.choice(keys, q).astype(np.int64))
+    state = idx.fstate
+    base_static = idx.fstatic()
+    times = {}
+    for strat in LOCATE_STRATEGIES:
+        static = base_static._replace(locate=strat)
+        times[strat] = time_batches(
+            lambda s=static: fops.lookup(state, queries, static=s)[
+                0
+            ].block_until_ready(),
+            n_iters=5,
+        )
+    rows = []
+    for strat in LOCATE_STRATEGIES:
+        dt = times[strat]
+        rows.append({
+            "name": f"locate/{strat}",
+            "us_per_call": round(dt * 1e6, 1),
+            "derived": f"{q/dt/1e6:.3f} Mq/s (interpret)",
+            "strategy": strat,
+            "n_keys": int(len(keys)),
+            "batch": q,
+            "speedup_vs_binsearch": round(times["binsearch"] / dt, 3),
+            "speedup_vs_spline": round(times["spline"] / dt, 3),
+        })
+    return rows
 
 
 def run(n_keys: int = 200_000, q: int = 4096, seed: int = 0):
     rng = np.random.default_rng(seed)
     rows = []
+    rows.extend(_locate_strategy_rows(n_keys // 2, q, seed))
     keys = np.unique(rng.integers(0, 1 << 52, n_keys).astype(np.int64))
     pos = np.arange(len(keys), dtype=np.int64) * 2
     model, static = build_radix_spline(keys, pos, max_error=24)

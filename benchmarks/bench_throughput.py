@@ -95,6 +95,86 @@ def run_sharded(
     return rows
 
 
+def run_locate_sweep(
+    n_keys: int = 200_000, batch: int = 8192, n_iters: int = 11, seed: int = 0
+):
+    """Locate-strategy sweep (ISSUE 5): lookup + insert throughput of the
+    binsearch / spline / fused search plans over identical index builds,
+    single-shard AND stacked (S=4 — the stacked fused path runs all shards
+    in ONE kernel launch via per-query shard base offsets). Interleaved
+    rounds, medians; off-TPU the fused rows run the kernels in interpret
+    mode, so they prove the wiring rather than the TPU win."""
+    rng = np.random.default_rng(seed)
+    keys = make_dataset("wikits", n_keys, seed)
+    init = keys[::2]
+    fresh = np.setdiff1d(keys, init)
+    rng.shuffle(fresh)
+    variants = [
+        (f"{strat}/S={s}", strat, s)
+        for strat in ("binsearch", "spline", "fused")
+        for s in (1, 4)
+    ]
+    indexes = {}
+    for name, strat, s in variants:
+        cfg = UpLIFConfig(bmat_capacity=n_keys, locate=strat)
+        indexes[name] = (
+            UpLIF(init, init + 1, cfg)
+            if s == 1
+            else ShardedUpLIF(init, init + 1, cfg, n_shards=s)
+        )
+
+    qs = rng.choice(init, batch).astype(np.int64)
+    for idx in indexes.values():
+        idx.lookup(qs)  # compile outside the timed rounds
+    look = {name: [] for name, _, _ in variants}
+    for _ in range(n_iters):
+        for name, _, _ in variants:
+            t0 = time.perf_counter()
+            indexes[name].lookup(qs)
+            look[name].append(time.perf_counter() - t0)
+
+    chunks = [
+        fresh[i: i + batch] for i in range(0, len(fresh) - batch, batch)
+    ]
+    warm, timed = chunks[:2], chunks[2: 2 + max(n_iters // 2, 4)]
+    for idx in indexes.values():
+        for c in warm:
+            idx.insert(c, c + 1)
+    ins = {name: [] for name, _, _ in variants}
+    for c in timed:
+        for name, _, _ in variants:
+            t0 = time.perf_counter()
+            indexes[name].insert(c, c + 1)
+            ins[name].append(time.perf_counter() - t0)
+
+    rows = []
+    for op, samples in (("lookup", look), ("insert", ins)):
+        base = {}
+        for name, strat, s in variants:
+            ts = sorted(samples[name])
+            dt = ts[len(ts) // 2]
+            base.setdefault(s, {})[strat] = dt
+        for name, strat, s in variants:
+            dt = sorted(samples[name])[len(samples[name]) // 2]
+            rows.append(
+                {
+                    "name": f"{op}/{name}",
+                    "us_per_call": round(1e6 * dt, 3),
+                    "derived": f"{batch / dt / 1e6:.4f} Mops/s",
+                    "mops": batch / dt / 1e6,
+                    "op": op,
+                    "strategy": strat,
+                    "n_shards": s,
+                    "batch": batch,
+                    "speedup_vs_binsearch": round(
+                        base[s]["binsearch"] / dt, 3
+                    ),
+                }
+            )
+    emit(rows, "locate_sweep")
+    return rows
+
+
 def run(n_keys: int = 400_000, seconds: float = 3.0, seed: int = 0):
     rows = []
     workloads = dict(WORKLOADS)
@@ -140,6 +220,7 @@ def run(n_keys: int = 400_000, seconds: float = 3.0, seed: int = 0):
             )
     emit(rows, "table2_throughput")
     rows.extend(run_sharded(n_keys=n_keys, seed=seed))
+    rows.extend(run_locate_sweep(n_keys=n_keys // 2, seed=seed))
     return rows
 
 

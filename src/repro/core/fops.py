@@ -39,11 +39,13 @@ from repro.core.bmat import RBMAT, _make_fences, _merge, _rank_bpmat, _rank_rbma
 from repro.core.radix_spline import _rs_predict_impl
 from repro.core.state import (
     LOCATE_BINSEARCH,
+    LOCATE_FUSED,
     Counters,
     UpLIFState,
     UpLIFStatic,
 )
 from repro.core.types import BMATState, KEY_MAX, TOMBSTONE, SlotsState
+from repro.kernels import ops as kops
 
 _I64_MAX = np.iinfo(np.int64).max
 
@@ -87,6 +89,22 @@ def _locate(static: UpLIFStatic, slot_keys, model, queries):
         hi = jnp.full(queries.shape, cap, dtype=jnp.int64)
         lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
         return lo - 1, jnp.full(queries.shape, cap - 1, dtype=jnp.int64)
+
+    if static.locate == LOCATE_FUSED and kops.locate_fusable(
+        cap, model.spline_keys.shape[0], model.table.shape[0], 1
+    ):
+        # Fused Pallas hot path: radix predict + knot search + interpolation
+        # + the SAME drift-proof 3-row bounded search below, in one kernel
+        # launch (interpret mode off-TPU). Shapes outside the VMEM guard
+        # fall through to the jnp spline path — same span, same j.
+        return kops.fused_locate(
+            model.table, model.spline_keys, model.spline_pos,
+            model.shift.reshape(1), slot_keys, queries,
+            jnp.zeros(queries.shape, dtype=jnp.int64),
+            n_table=model.table.shape[0],
+            n_knots=model.spline_keys.shape[0],
+            cap=cap, window=static.window, rs_iters=static.rs_iters,
+        )
 
     # Learned path: spline predict + bounded probes over the 3-row span
     # around the prediction. Why 3 rows and not one centered window: an
@@ -136,6 +154,18 @@ def _probe(slot_keys, slot_vals, slot_occ, j, queries):
 def _bmat_rank(static: UpLIFStatic, bmat: BMATState, queries):
     """searchsorted-left rank over the packed BMAT (layout per static)."""
     cap = bmat.keys.shape[0]
+    if static.locate == LOCATE_FUSED and kops.rank_fusable(
+        cap, bmat.fences.shape[0]
+    ):
+        # Definition 1 bias query r(k) through the fused two-level kernel.
+        # The rank is an exact integer search, so this is byte-identical to
+        # the jnp fence/node bisects for BOTH BMAT kinds (the fence arrays
+        # are maintained regardless of the traversal the jnp path uses).
+        return kops.bmat_rank_fused(
+            bmat.keys, bmat.fences, queries,
+            jnp.zeros(queries.shape, dtype=jnp.int64),
+            cap=cap, nf=bmat.fences.shape[0], fanout=static.fanout,
+        )
     if static.bmat_kind == RBMAT:
         return _rank_rbmat(bmat.keys, queries, max(1, int(np.log2(cap))))
     nf = bmat.fences.shape[0]
@@ -595,6 +625,21 @@ def _locate_stacked(static: UpLIFStatic, slot_keys, model, q, sid):
         lo, hi = jax.lax.fori_loop(0, n_iters, body, (lo, hi))
         return lo - 1, jnp.full(q.shape, cap - 1, dtype=jnp.int64)
 
+    if static.locate == LOCATE_FUSED and kops.locate_fusable(
+        cap, model.spline_keys.shape[1], model.table.shape[1], S
+    ):
+        # ONE kernel launch for all S shards: arrays flatten over the shard
+        # axis and every query carries its base offsets (sid * dim), so S
+        # stays amortized to zero exactly like the flat jnp variants.
+        return kops.fused_locate(
+            model.table.reshape(-1), model.spline_keys.reshape(-1),
+            model.spline_pos.reshape(-1), model.shift,
+            flat, q, sid,
+            n_table=model.table.shape[1],
+            n_knots=model.spline_keys.shape[1],
+            cap=cap, window=static.window, rs_iters=static.rs_iters,
+        )
+
     W = static.window
     L = min(3 * W, cap)  # 3-row drift-proof span (see _locate)
     n_bisect = max(1, int(np.ceil(np.log2(L))))
@@ -663,6 +708,13 @@ def _bmat_rank_stacked(static: UpLIFStatic, bmat: BMATState, q, sid):
     S, cap = bmat.keys.shape
     kflat = bmat.keys.reshape(-1)
     base = sid * cap
+    if static.locate == LOCATE_FUSED and kops.rank_fusable(
+        S * cap, S * bmat.fences.shape[1]
+    ):
+        return kops.bmat_rank_fused(
+            kflat, bmat.fences.reshape(-1), q, sid,
+            cap=cap, nf=bmat.fences.shape[1], fanout=static.fanout,
+        ).astype(jnp.int64)
     if static.bmat_kind == RBMAT:
         levels = max(1, int(np.log2(cap)))
 

@@ -508,6 +508,12 @@ class ShardedUpLIF:
         )
 
     def _static(self) -> UpLIFStatic:
+        # resolve cfg.locate ("auto" -> fused on TPU / spline elsewhere)
+        # exactly like the shard shells do, so router ops and host-side
+        # maintenance replay run the same strategy
+        from repro.core.state import resolve_locate
+        from repro.kernels.ops import on_tpu
+
         return UpLIFStatic(
             window=self.cfg.window,
             movement_k=self.cfg.movement_k,
@@ -515,7 +521,7 @@ class ShardedUpLIF:
             insert_rounds=self.cfg.insert_rounds,
             fanout=self.cfg.bmat_fanout,
             bmat_kind=self.bmat_kind,
-            locate=UpLIF.LOCATE,
+            locate=resolve_locate(self.cfg.locate, on_tpu()),
         )
 
     def _read_view(self):

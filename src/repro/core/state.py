@@ -28,6 +28,29 @@ _I64_MAX = np.iinfo(np.int64).max
 
 LOCATE_SPLINE = "spline"      # radix-spline predict + bounded window bisect
 LOCATE_BINSEARCH = "binsearch"  # model-free full bisect (B+Tree baseline)
+LOCATE_FUSED = "fused"        # fused Pallas predict+search kernel (hot path)
+LOCATE_AUTO = "auto"          # resolve per platform (fused on TPU)
+
+LOCATE_STRATEGIES = (LOCATE_SPLINE, LOCATE_BINSEARCH, LOCATE_FUSED)
+
+
+def resolve_locate(requested: str, on_tpu: bool) -> str:
+    """Map a configured locate strategy to a concrete one.
+
+    ``LOCATE_AUTO`` picks the fused Pallas kernels on TPU (where the single
+    kernel launch amortizes predict + bounded search + interpolation) and
+    the jnp spline path elsewhere — off-TPU the kernels only run in
+    interpret mode, which is a correctness proxy, not a speedup. Explicit
+    strategies pass through validated, so tests/benches can pin interpret-
+    mode fused on CPU."""
+    if requested == LOCATE_AUTO:
+        return LOCATE_FUSED if on_tpu else LOCATE_SPLINE
+    if requested not in LOCATE_STRATEGIES:
+        raise ValueError(
+            f"unknown locate strategy {requested!r}; "
+            f"expected one of {LOCATE_STRATEGIES + (LOCATE_AUTO,)}"
+        )
+    return requested
 
 
 class Counters(NamedTuple):
@@ -63,7 +86,7 @@ class UpLIFStatic(NamedTuple):
     insert_rounds: int  # in-place retry rounds before BMAT overflow
     fanout: int         # B+MAT fence fanout
     bmat_kind: str      # 'rbmat' | 'b+mat'
-    locate: str         # LOCATE_SPLINE | LOCATE_BINSEARCH
+    locate: str         # LOCATE_SPLINE | LOCATE_BINSEARCH | LOCATE_FUSED
 
 
 def init_counters(

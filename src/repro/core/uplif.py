@@ -39,11 +39,14 @@ from repro.core.gmm import fit_gmm, gmm_memory_bytes, init_gmm_uniform
 from repro.core.nullifier import nullify
 from repro.core.radix_spline import build_radix_spline, rs_memory_bytes
 from repro.core.state import (
-    LOCATE_SPLINE,
+    LOCATE_AUTO,
+    LOCATE_BINSEARCH,
+    LOCATE_STRATEGIES,
     Counters,
     UpLIFState,
     UpLIFStatic,
     init_counters,
+    resolve_locate,
 )
 from repro.core.types import GMMState, KEY_MAX, TOMBSTONE, SlotsState
 
@@ -65,10 +68,15 @@ class UpLIFConfig:
     bmat_type: str = BPMAT
     bmat_fanout: int = 16
     bmat_capacity: int = 4096    # initial delta-buffer capacity (grows)
+    # locate/rank strategy for the fops hot path: "auto" resolves per
+    # platform (fused Pallas kernels on TPU, jnp spline elsewhere); tests
+    # and benches pin "spline" / "binsearch" / "fused" explicitly.
+    locate: str = LOCATE_AUTO
 
     def __post_init__(self):
         assert self.window & (self.window - 1) == 0
         assert 2 * (self.max_error + self.movement_k) + 4 <= self.window
+        assert self.locate in LOCATE_STRATEGIES + (LOCATE_AUTO,)
 
 
 def bucket_width(n: int, batch_bucket: int) -> int:
@@ -83,9 +91,10 @@ def bucket_width(n: int, batch_bucket: int) -> int:
 class UpLIF:
     """Batched updatable learned index (thin shell over repro.core.fops)."""
 
-    # Locate strategy baked into the jitted ops; baselines override
-    # (e.g. the B+Tree baseline uses a pure binary search).
-    LOCATE = LOCATE_SPLINE
+    # Class-level locate override for baselines (e.g. the B+Tree baseline
+    # pins a pure binary search); None defers to cfg.locate, which "auto"-
+    # resolves per platform (fused Pallas kernels on TPU).
+    LOCATE: Optional[str] = None
 
     def __init__(
         self,
@@ -175,20 +184,28 @@ class UpLIF:
             counters=self._counters,
         )
 
+    def locate_strategy(self) -> str:
+        """Concrete locate strategy for this call: the class override (the
+        baselines' hook) wins, then cfg.locate with platform resolution."""
+        from repro.kernels.ops import on_tpu
+
+        return resolve_locate(self.LOCATE or self.cfg.locate, on_tpu())
+
     def fstatic(self) -> UpLIFStatic:
         """Hashable static config for the fops suite."""
+        locate = self.locate_strategy()
         return UpLIFStatic(
             window=self.cfg.window,
             movement_k=self.cfg.movement_k,
             rs_iters=(
                 self.rs_static.n_search_iters
-                if self.LOCATE == LOCATE_SPLINE
+                if locate != LOCATE_BINSEARCH
                 else 0
             ),
             insert_rounds=self.cfg.insert_rounds,
             fanout=self.bmat.fanout,
             bmat_kind=self.bmat.tree_type,
-            locate=self.LOCATE,
+            locate=locate,
         )
 
     def _adopt(self, state: UpLIFState):

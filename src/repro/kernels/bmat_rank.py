@@ -2,9 +2,18 @@
 
 Two-level B+MAT search in one kernel: (1) bounded binary search over the
 fence array (every FANOUT-th key; VMEM-resident — the analogue of inner
-nodes living in cache), (2) bounded search inside the located node. The full
-key array is VMEM-resident up to ops.MAX_VMEM_KEYS; larger buffers fall back
-to the two-level tile_search composition in ops.py.
+nodes living in cache), (2) bounded search inside the located node. The
+kernel is offset-aware: key/fence arrays arrive flattened over the shard
+axis and every query carries its base offsets (kbase = sid * cap, fbase =
+sid * nf), so the stacked fops rank path runs S BMATs in one launch with
+the per-query op count of a single shard — the same generalization the
+fused locate kernel uses. A single BMAT is just the all-zero-bases case,
+so one kernel serves both (test_kernels pins byte-identity per shard).
+Searches run in GLOBAL (flat) coordinates so the loop bodies contain no
+offset adds; ``mid <= fbase + nf - 1`` is a fence-loop invariant, so the
+fence gather needs no clamping (mirrors fops._bmat_rank_stacked). The full
+key array is VMEM-resident up to ops.MAX_VMEM_KEYS; larger buffers fall
+back to the two-level tile_search composition in ops.py.
 """
 from __future__ import annotations
 
@@ -14,69 +23,74 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-Q_BLK = 1024
+OFF_Q_BLK = 256  # batches are bucketed >= 256; smaller block = less padding
 
 
-def _kernel(fanout: int, fence_iters: int, node_iters: int,
-            keys_hi_ref, keys_lo_ref, f_hi_ref, f_lo_ref,
-            q_hi_ref, q_lo_ref, out_ref):
+def _offset_kernel(fanout: int, fence_iters: int, node_iters: int,
+                   cap: int, nf: int,
+                   keys_hi_ref, keys_lo_ref, f_hi_ref, f_lo_ref,
+                   q_hi_ref, q_lo_ref, kbase_ref, fbase_ref, out_ref):
     kh = keys_hi_ref[...]
     kl = keys_lo_ref[...]
     fh = f_hi_ref[...]
     fl = f_lo_ref[...]
     qh = q_hi_ref[...]
     ql = q_lo_ref[...]
-    nf = fh.shape[0]
-    cap = kh.shape[0]
+    kbase = kbase_ref[...]
+    fbase = fbase_ref[...]
 
     def lt(ah, al, bh, bl):  # a < b
         return (ah < bh) | ((ah == bh) & (al < bl))
 
-    # fence level: first fence >= q
     def fstep(_, carry):
         lo, hi = carry
         mid = (lo + hi) >> 1
-        midc = jnp.minimum(mid, nf - 1)
-        go = lt(jnp.take(fh, midc), jnp.take(fl, midc), qh, ql)
+        go = lt(jnp.take(fh, mid), jnp.take(fl, mid), qh, ql)
         return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
 
-    lo = jnp.zeros_like(qh)
-    hi = jnp.full_like(qh, nf - 1)
-    lo, hi = jax.lax.fori_loop(0, fence_iters, fstep, (lo, hi))
+    lo, hi = jax.lax.fori_loop(
+        0, fence_iters, fstep, (fbase, fbase + (nf - 1))
+    )
 
-    node_lo = jnp.maximum(lo - 1, 0) * fanout
-    node_hi = jnp.minimum(node_lo + fanout, cap)
+    node_lo = kbase + jnp.maximum(lo - fbase - 1, 0) * fanout
+    node_hi = jnp.minimum(node_lo + fanout, kbase + cap)
+    kcap = kbase + (cap - 1)
 
     def nstep(_, carry):
         lo, hi = carry
         mid = (lo + hi) >> 1
-        midc = jnp.minimum(mid, cap - 1)
+        midc = jnp.minimum(mid, kcap)
         go = lt(jnp.take(kh, midc), jnp.take(kl, midc), qh, ql)
         return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
 
-    nlo, nhi = jax.lax.fori_loop(0, node_iters, nstep, (node_lo, node_hi))
-    out_ref[...] = jnp.minimum(nlo, cap).astype(jnp.int32)
+    nlo, _ = jax.lax.fori_loop(0, node_iters, nstep, (node_lo, node_hi))
+    out_ref[...] = jnp.minimum(nlo - kbase, cap)
 
 
-def bmat_rank_pallas(
-    keys_hi, keys_lo, f_hi, f_lo, q_hi, q_lo, *,
-    fanout: int, interpret: bool = True,
+def bmat_rank_offset_pallas(
+    keys_hi, keys_lo, f_hi, f_lo, q_hi, q_lo, kbase, fbase, *,
+    cap: int, nf: int, fanout: int, interpret: bool = True,
 ):
+    """Shard-local searchsorted-left rank per query (int32, in [0, cap]).
+    ``cap``/``nf`` are PER-SHARD dims of the flattened key/fence arrays."""
     import numpy as np
 
     q = q_hi.shape[0]
-    assert q % Q_BLK == 0
-    cap = keys_hi.shape[0]
-    nf = f_hi.shape[0]
+    assert q % OFF_Q_BLK == 0
+    tk = keys_hi.shape[0]
+    tf = f_hi.shape[0]
     fence_iters = int(np.ceil(np.log2(nf + 1)))
     node_iters = int(np.ceil(np.log2(fanout + 1)))
     full = lambda n: pl.BlockSpec((n,), lambda i: (0,))
-    per_q = pl.BlockSpec((Q_BLK,), lambda i: (i,))
+    per_q = pl.BlockSpec((OFF_Q_BLK,), lambda i: (i,))
     return pl.pallas_call(
-        functools.partial(_kernel, fanout, fence_iters, node_iters),
+        functools.partial(
+            _offset_kernel, fanout, fence_iters, node_iters, cap, nf
+        ),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
-        grid=(q // Q_BLK,),
-        in_specs=[full(cap), full(cap), full(nf), full(nf), per_q, per_q],
+        grid=(q // OFF_Q_BLK,),
+        in_specs=[full(tk), full(tk), full(tf), full(tf),
+                  per_q, per_q, per_q, per_q],
         out_specs=per_q,
         interpret=interpret,
-    )(keys_hi, keys_lo, f_hi, f_lo, q_hi, q_lo)
+    )(keys_hi, keys_lo, f_hi, f_lo, q_hi, q_lo, kbase, fbase)

@@ -14,12 +14,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.bmat_rank import Q_BLK as RANK_Q_BLK, bmat_rank_pallas
+from repro.kernels.bmat_rank import OFF_Q_BLK, bmat_rank_offset_pallas
 from repro.kernels.gmm_estep import N_BLK as GMM_N_BLK, gmm_estep_pallas
-from repro.kernels.spline_lookup import Q_BLK as SPL_Q_BLK, spline_lookup_pallas
+from repro.kernels.spline_lookup import (
+    LOC_Q_BLK,
+    Q_BLK as SPL_Q_BLK,
+    fused_locate_pallas,
+    spline_lookup_pallas,
+)
 from repro.kernels.tile_search import Q_BLK as TS_Q_BLK, TILE, tile_search_pallas
 
 MAX_VMEM_KEYS = 131072  # ~1MB hi/lo in VMEM; larger buffers use tile fallback
+MAX_VMEM_SLOTS = 1 << 20   # fused-locate slot residency guard (8MB hi/lo)
+MAX_F32_POSITIONS = 1 << 24  # f32 slot positions are exact below this
 
 
 def on_tpu() -> bool:
@@ -70,6 +77,23 @@ def spline_lookup(table, spline_keys, spline_pos, shift, queries, n_iters):
 # -- last-mile tile search ----------------------------------------------------
 
 
+def _tile_buckets(xp, tile_id, block: int):
+    """Sort-based per-tile query bucketing shared by every tile_search
+    composition (``xp`` is np or jnp — the jnp form stays traceable).
+    Returns (order, t_sorted, flat, ok): queries sorted by tile, their flat
+    slot in the (n_tiles, block) buffer, and the capacity mask — entries
+    beyond ``block`` per tile get ok=False and must be handled by the
+    caller (oracle path / a further pass)."""
+    order = xp.argsort(tile_id)
+    t_sorted = tile_id[order]
+    within = xp.arange(t_sorted.shape[0]) - xp.searchsorted(
+        t_sorted, t_sorted, side="left"
+    )
+    ok = within < block
+    flat = t_sorted * block + xp.minimum(within, block - 1)
+    return order, t_sorted, flat, ok
+
+
 def route_and_search(slot_keys, queries, pred_pos):
     """Sort-based routing: map each query to the TILE containing its
     predicted position, run the tile kernel, compose global indices.
@@ -86,16 +110,10 @@ def route_and_search(slot_keys, queries, pred_pos):
     tiles_lo = kl.reshape(n_tiles, TILE)
 
     tile_id = jnp.clip(pred_pos.astype(jnp.int64) // TILE, 0, n_tiles - 1)
-    order = jnp.argsort(tile_id)
-    q_sorted = queries[order]
-    t_sorted = tile_id[order]
     # bucket queries per tile with capacity TS_Q_BLK (overflow -> oracle path)
+    order, t_sorted, flat, ok = _tile_buckets(jnp, tile_id, TS_Q_BLK)
+    q_sorted = queries[order]
     qh, ql = split_key(q_sorted)
-    within = jnp.arange(q_sorted.shape[0]) - jnp.searchsorted(
-        t_sorted, t_sorted, side="left"
-    )
-    ok = within < TS_Q_BLK
-    flat = t_sorted * TS_Q_BLK + jnp.minimum(within, TS_Q_BLK - 1)
     buf_hi = jnp.zeros((n_tiles * TS_Q_BLK,), jnp.int32).at[flat].set(
         jnp.where(ok, qh, 0), mode="drop"
     )
@@ -116,23 +134,162 @@ def route_and_search(slot_keys, queries, pred_pos):
     return j_sorted[inv], ok[inv]
 
 
+# -- fused locate (predict + bounded window search, one launch) --------------
+
+
+def locate_fusable(cap: int, n_knots: int, n_table: int, n_shards: int) -> bool:
+    """Static-shape guard for the fused locate kernel: every array it keeps
+    resident must fit the VMEM budget, the per-shard capacity must stay
+    below the f32 position-precision bound, and the model must have at
+    least one real spline segment. ``cap``/``n_knots``/``n_table`` are
+    per-shard dims; all arguments are trace-time python ints (array
+    shapes), so fops can branch on this under jit."""
+    return (
+        cap <= MAX_F32_POSITIONS
+        and n_shards * cap <= MAX_VMEM_SLOTS
+        and n_shards * n_knots <= MAX_VMEM_KEYS
+        and n_shards * n_table <= MAX_VMEM_KEYS
+        and n_knots >= 2
+    )
+
+
+def fused_locate(
+    table, spline_keys, spline_pos, shift, slot_keys, queries, sid,
+    *, n_table: int, n_knots: int, cap: int, window: int, rs_iters: int,
+):
+    """Jit-traceable adapter around ``fused_locate_pallas``.
+
+    ``table``/``spline_keys``/``spline_pos``/``slot_keys`` are FLAT over the
+    shard axis ([S*T], [S*K], [S*cap]); ``shift`` is the per-shard [S] radix
+    shift; ``sid`` maps each query to its shard (all zeros for a single
+    shard). Handles the int64 -> (hi, lo) decomposition, the per-query base
+    offsets and the block padding; returns (j, icap) as int64 with the
+    ``fops._locate`` contract."""
+    interpret = not on_tpu()
+    L = min(3 * window, cap)
+    sk_hi, sk_lo = split_key(spline_keys)
+    sl_hi, sl_lo = split_key(slot_keys)
+    q_hi, q_lo = split_key(queries)
+    sp32 = spline_pos.astype(jnp.float32)
+    tb = (sid * n_table).astype(jnp.int32)
+    sb = (sid * n_knots).astype(jnp.int32)
+    slb = (sid * cap).astype(jnp.int32)
+    sh = shift.astype(jnp.int32)[sid]
+    q_hi, n = _pad_to(q_hi, LOC_Q_BLK, np.iinfo(np.int32).max)
+    q_lo, _ = _pad_to(q_lo, LOC_Q_BLK, np.iinfo(np.uint32).max)
+    tb, _ = _pad_to(tb, LOC_Q_BLK, 0)
+    sb, _ = _pad_to(sb, LOC_Q_BLK, 0)
+    slb, _ = _pad_to(slb, LOC_Q_BLK, 0)
+    sh, _ = _pad_to(sh, LOC_Q_BLK, 32)
+    j, start = fused_locate_pallas(
+        table, sk_hi, sk_lo, sp32, sl_hi, sl_lo,
+        q_hi, q_lo, tb, sb, slb, sh,
+        n_table=n_table, n_knots=n_knots, cap=cap, window=window,
+        rs_iters=rs_iters, interpret=interpret,
+    )
+    j = j[:n].astype(jnp.int64)
+    icap = start[:n].astype(jnp.int64) + (L - 1)
+    return j, icap
+
+
 # -- bmat rank ---------------------------------------------------------------
 
 
-def bmat_rank(keys, fences, queries, fanout: int):
+def rank_fusable(n_keys: int, n_fences: int) -> bool:
+    """VMEM guard for the offset rank kernel (trace-time shapes)."""
+    return n_keys <= MAX_VMEM_KEYS and n_fences <= MAX_VMEM_KEYS
+
+
+def bmat_rank_fused(keys, fences, queries, sid, *, cap: int, nf: int,
+                    fanout: int):
+    """Jit-traceable shard-offset rank: ``keys``/``fences`` flat over the
+    shard axis, ``sid`` per query (zeros for a single shard). Returns the
+    shard-local searchsorted-left rank as int32 (callers widen)."""
     interpret = not on_tpu()
     kh, kl = split_key(keys)
     fh, fl = split_key(fences)
     qh, ql = split_key(queries)
-    qh, n = _pad_to(qh, RANK_Q_BLK, np.iinfo(np.int32).max)
-    ql, _ = _pad_to(ql, RANK_Q_BLK, np.iinfo(np.uint32).max)
-    if keys.shape[0] > MAX_VMEM_KEYS:
-        out = ref.bmat_rank_ref(kh, kl, qh, ql)  # oracle fallback, documented
-    else:
-        out = bmat_rank_pallas(
-            kh, kl, fh, fl, qh, ql, fanout=fanout, interpret=interpret
-        )
+    kb = (sid * cap).astype(jnp.int32)
+    fb = (sid * nf).astype(jnp.int32)
+    qh, n = _pad_to(qh, OFF_Q_BLK, np.iinfo(np.int32).max)
+    ql, _ = _pad_to(ql, OFF_Q_BLK, np.iinfo(np.uint32).max)
+    kb, _ = _pad_to(kb, OFF_Q_BLK, 0)
+    fb, _ = _pad_to(fb, OFF_Q_BLK, 0)
+    out = bmat_rank_offset_pallas(
+        kh, kl, fh, fl, qh, ql, kb, fb,
+        cap=cap, nf=nf, fanout=fanout, interpret=interpret,
+    )
     return out[:n]
+
+
+def _bmat_rank_tiled(keys, queries):
+    """Two-level tile_search composition for buffers beyond MAX_VMEM_KEYS.
+
+    Level 1 routes each query EXACTLY (no model prediction involved): the
+    rank of ``q`` lives in the last TILE whose first key is <= q - 1, found
+    by a searchsorted over the tile-first keys (cap/TILE entries — tiny).
+    Level 2 runs the tile kernel on ``q - 1`` (searchsorted-left rank =
+    1 + index of the last key <= q - 1) with sort-based per-tile bucketing.
+    Queries beyond a tile's block capacity re-run in further passes — the
+    host loop touches only the unresolved remainder, so heavily duplicated
+    query batches terminate in ceil(dup/Q_BLK) passes. Memory stays
+    O(tiles * TILE + Q) instead of the O(Q * cap) broadcast compare of the
+    jnp oracle, and every pass is on-device."""
+    cap = keys.shape[0]
+    sk, _ = _pad_to(keys, TILE, np.iinfo(np.int64).max)
+    n_tiles = sk.shape[0] // TILE
+    kh, kl = split_key(sk)
+    tiles_hi = kh.reshape(n_tiles, TILE)
+    tiles_lo = kl.reshape(n_tiles, TILE)
+    interpret = not on_tpu()
+
+    qm1 = queries - 1  # keys are non-negative: q - 1 >= -1 orders below all
+    tile_id = np.clip(
+        np.searchsorted(np.asarray(sk[::TILE]), np.asarray(qm1), "right") - 1,
+        0, n_tiles - 1,
+    )
+    qh_all, ql_all = split_key(qm1)
+    qh_all = np.asarray(qh_all)
+    ql_all = np.asarray(ql_all)
+
+    out = np.zeros(queries.shape[0], dtype=np.int32)
+    todo = np.arange(queries.shape[0])
+    while todo.size:
+        order, t_sorted, flat, ok = _tile_buckets(
+            np, tile_id[todo], TS_Q_BLK
+        )
+        buf_hi = np.zeros(n_tiles * TS_Q_BLK, np.int32)
+        buf_lo = np.zeros(n_tiles * TS_Q_BLK, np.uint32)
+        sel = todo[order]
+        buf_hi[flat[ok]] = qh_all[sel[ok]]
+        buf_lo[flat[ok]] = ql_all[sel[ok]]
+        local = np.asarray(
+            tile_search_pallas(
+                tiles_hi, tiles_lo,
+                jnp.asarray(buf_hi.reshape(n_tiles, TS_Q_BLK)),
+                jnp.asarray(buf_lo.reshape(n_tiles, TS_Q_BLK)),
+                interpret=interpret,
+            )
+        ).reshape(-1)
+        res = sel[ok]
+        out[res] = np.minimum(
+            t_sorted[ok] * TILE + local[flat[ok]] + 1, cap
+        ).astype(np.int32)
+        todo = sel[~ok]
+    return jnp.asarray(out)
+
+
+def bmat_rank(keys, fences, queries, fanout: int):
+    if keys.shape[0] > MAX_VMEM_KEYS:
+        # two-level tiled composition: fences are implicit in the tile-first
+        # keys, so the fence array is not needed here
+        return _bmat_rank_tiled(keys, queries)
+    # single BMAT = the offset kernel with all-zero bases (one search
+    # implementation to keep in sync with the fused fops path)
+    return bmat_rank_fused(
+        keys, fences, queries, jnp.zeros(queries.shape, dtype=jnp.int64),
+        cap=keys.shape[0], nf=fences.shape[0], fanout=fanout,
+    )
 
 
 # -- gmm e-step ---------------------------------------------------------------

@@ -53,6 +53,7 @@ class PrefixCacheIndex:
         capacity_hint: int = 4096,
         n_shards: Optional[int] = None,
         tuner: Optional[SelfTuner] = None,
+        locate: str = "auto",
     ):
         self.capacity_hint = int(capacity_hint)
         if n_shards is None:
@@ -62,10 +63,14 @@ class PrefixCacheIndex:
         n_seed = max(8, 2 * n_shards)
         seed_keys = np.linspace(1, _MASK, n_seed).astype(np.int64)
         per_shard_buf = max(256, self.capacity_hint // max(n_shards, 1))
+        # locate="auto" puts the match()/admit() hot path on the fused
+        # Pallas locate/rank kernels when serving runs on TPU
         self.index = ShardedUpLIF(
             seed_keys,
             np.full(n_seed, -1, dtype=np.int64),
-            UpLIFConfig(batch_bucket=256, bmat_capacity=per_shard_buf),
+            UpLIFConfig(
+                batch_bucket=256, bmat_capacity=per_shard_buf, locate=locate
+            ),
             n_shards=n_shards,
         )
         self.slots: Dict[int, Any] = {}
@@ -165,6 +170,7 @@ class ServeEngine:
         async_maintenance: bool = True,
         max_concurrent_builds: int = 2,
         commit_replay_cap: Optional[int] = 4096,
+        locate: str = "auto",
     ):
         self.cfg = cfg
         self.params = params
@@ -188,7 +194,7 @@ class ServeEngine:
                 if async_maintenance
                 else SelfTuner()
             )
-        self.prefix_index = PrefixCacheIndex(tuner=tuner)
+        self.prefix_index = PrefixCacheIndex(tuner=tuner, locate=locate)
         self._decode = jax.jit(
             lambda p, tok, cache: decode_step(p, cfg, tok, cache)
         )

@@ -108,6 +108,99 @@ def test_gmm_estep_sweep(n, k):
     np.testing.assert_allclose(got.sum(1), 1.0, atol=1e-5)
 
 
+def test_bmat_rank_big_buffer_tiled():
+    """Above MAX_VMEM_KEYS the rank wrapper must use the two-level
+    tile_search composition (bounded memory, on-device) and stay exact —
+    including under heavily duplicated query batches that overflow a
+    tile's per-pass block capacity."""
+    r = np.random.default_rng(11)
+    cap = ops.MAX_VMEM_KEYS * 2
+    n = cap - 777
+    arr = np.full(cap, np.iinfo(np.int64).max, np.int64)
+    arr[:n] = np.sort(r.integers(0, 1 << 52, n).astype(np.int64))
+    fences = np.concatenate([arr[::16], [np.iinfo(np.int64).max]])
+    q = np.concatenate([
+        r.integers(0, 1 << 52, 1024),
+        r.choice(arr[:n], 512),
+        np.full(TS_QBLK + 100, arr[5]),  # one tile, > one pass
+        [0, 1, arr[0], arr[n - 1], 1 << 52],
+    ]).astype(np.int64)
+    got = np.asarray(
+        ops.bmat_rank(jnp.asarray(arr), jnp.asarray(fences), jnp.asarray(q), 16)
+    )
+    assert np.array_equal(got, np.searchsorted(arr, q, "left"))
+
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_bmat_rank_offset_kernel(n_shards):
+    """Offset-aware rank kernel vs per-shard searchsorted."""
+    r = np.random.default_rng(21 + n_shards)
+    cap, fanout = 2048, 16
+    keys = np.full((n_shards, cap), np.iinfo(np.int64).max, np.int64)
+    for s in range(n_shards):
+        m = cap // 2 + 37 * s
+        keys[s, :m] = np.sort(r.integers(0, 1 << 48, m).astype(np.int64))
+    fences = np.concatenate(
+        [keys[:, ::fanout], np.full((n_shards, 1), np.iinfo(np.int64).max,
+                                    np.int64)], axis=1
+    )
+    q = r.integers(0, 1 << 48, 1024).astype(np.int64)
+    sid = r.integers(0, n_shards, 1024).astype(np.int64)
+    got = np.asarray(ops.bmat_rank_fused(
+        jnp.asarray(keys.reshape(-1)), jnp.asarray(fences.reshape(-1)),
+        jnp.asarray(q), jnp.asarray(sid),
+        cap=cap, nf=fences.shape[1], fanout=fanout,
+    ))
+    gold = np.asarray(
+        [np.searchsorted(keys[s], k, "left") for s, k in zip(sid, q)]
+    )
+    assert np.array_equal(got, gold)
+
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_fused_locate_kernel_vs_fops(n_shards):
+    """The fused locate adapter must return the same (j, icap) as the jnp
+    spline locate it replaces, single-shard and stacked."""
+    from repro.core import fops
+    from repro.core.state import UpLIFStatic
+    from repro.core.uplif import UpLIF, UpLIFConfig
+    from repro.core.sharded import ShardedUpLIF
+
+    keys = make_keys(4000, 31 + n_shards, hi=1 << 44)
+    r = np.random.default_rng(5)
+    q = np.concatenate([
+        r.choice(keys, 800), r.integers(0, 1 << 44, 200)
+    ]).astype(np.int64)
+    if n_shards == 1:
+        idx = UpLIF(keys, keys + 1, UpLIFConfig(locate="spline"))
+        st_sp = idx.fstatic()
+        st_fu = st_sp._replace(locate="fused")
+        jq = jnp.asarray(q)
+        j0, c0 = fops._locate(st_sp, idx.slots.keys, idx.rs_model, jq)
+        j1, c1 = fops._locate(st_fu, idx.slots.keys, idx.rs_model, jq)
+    else:
+        idx = ShardedUpLIF(
+            keys, keys + 1, UpLIFConfig(locate="spline"), n_shards=n_shards
+        )
+        st_sp = idx._static()
+        st_fu = st_sp._replace(locate="fused")
+        jq = jnp.asarray(q)
+        sid = jnp.asarray(np.searchsorted(idx.boundaries, q, "right"))
+        j0, c0 = fops._locate_stacked(
+            st_sp, idx.state.slots.keys, idx.state.model, jq, sid
+        )
+        j1, c1 = fops._locate_stacked(
+            st_fu, idx.state.slots.keys, idx.state.model, jq, sid
+        )
+    # j is exact in both paths whenever the span covers the truth — which
+    # the drift-proof 3-row construction guarantees for this workload
+    assert np.array_equal(np.asarray(j0), np.asarray(j1))
+    # icap may differ only when f32 interpolation rounds the predicted slot
+    # across a row edge: by at most one W-row
+    W = st_sp.window
+    assert np.abs(np.asarray(c0) - np.asarray(c1)).max() <= W
+
+
 def test_split_key_roundtrip_order():
     r = np.random.default_rng(77)
     a = jnp.asarray(np.sort(r.integers(0, 1 << 52, 1000).astype(np.int64)))
