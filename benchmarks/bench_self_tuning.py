@@ -157,8 +157,12 @@ def _run_policy(
                 scheduler=sched,
             )
         ).attach(idx)
+    from benchmarks.common import LatencyHistogram
+
     ops = 0
-    wave_s = []
+    # shared streaming histogram (benchmarks/common.py): same log-bucketed
+    # p50/p95/p99.9 machinery bench_gateway uses for its tail rows
+    wave_hist = LatencyHistogram()
     replay_bursts = []  # ops rebased at each wave boundary (commit pacing)
     t0 = time.perf_counter()
     for w, (reads, ins, scans) in enumerate(plan):
@@ -178,7 +182,8 @@ def _run_policy(
             )
         elif policy == "always_retrain" and (w + 1) % retrain_every == 0:
             idx.retrain_full()
-        wave_s.append(time.perf_counter() - w0)
+        if w >= WARMUP_WAVES:  # cold jit debt stays out of the percentiles
+            wave_hist.record(time.perf_counter() - w0)
         replay_bursts.append(int(idx.n_replayed_ops - rep0))
     if tuner is not None:
         tuner.drain()
@@ -188,16 +193,16 @@ def _run_policy(
     f, v = idx.lookup(probe_i)
     assert f.all() and np.array_equal(v, probe_i + 1), policy
     all_keys = np.concatenate([init] + [p[1] for p in plan])
-    lat = np.asarray(wave_s[WARMUP_WAVES:]) * 1e3
     bursts = np.asarray(replay_bursts[WARMUP_WAVES:])
     nz = bursts[bursts > 0]
     res = {
         "policy": policy,
         "ops_per_s": ops / dt,
         "seconds": dt,
-        "p50_wave_ms": float(np.percentile(lat, 50)),
-        "p95_wave_ms": float(np.percentile(lat, 95)),
-        "max_wave_ms": float(lat.max()),
+        "p50_wave_ms": wave_hist.percentile(50) * 1e3,
+        "p95_wave_ms": wave_hist.percentile(95) * 1e3,
+        "p999_wave_ms": wave_hist.percentile(99.9) * 1e3,
+        "max_wave_ms": wave_hist.max_s * 1e3,
         # per-wave replay-burst histogram: the commit-pacing evidence —
         # with a cap, max must stay within cap + one logged batch
         "replay_burst_per_wave": [int(b) for b in bursts],

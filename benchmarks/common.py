@@ -2,11 +2,107 @@
 from __future__ import annotations
 
 import json
+import math
 import os
+import threading
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+class LatencyHistogram:
+    """Streaming log-bucketed latency histogram (thread-safe, mergeable).
+
+    Fixed-size bucket array over a geometric grid (``bpd`` buckets per
+    decade, default 24 → ~10% relative resolution) spanning
+    [``lo_s``, ``hi_s``]; out-of-range samples clamp to the edge buckets.
+    O(1)/sample with no per-sample storage, so O(10^5)-client closed-loop
+    benches can record every request; ``merge`` folds per-thread or
+    per-mode histograms; percentiles interpolate inside the winning
+    bucket. Exact min/max/sum ride along for sanity rows."""
+
+    def __init__(self, lo_s: float = 1e-6, hi_s: float = 100.0,
+                 bpd: int = 24):
+        self.lo_s = float(lo_s)
+        self.hi_s = float(hi_s)
+        self.bpd = int(bpd)
+        self._log_lo = math.log10(self.lo_s)
+        n = int(math.ceil((math.log10(self.hi_s) - self._log_lo) * bpd)) + 1
+        self.counts = [0] * n
+        self.n = 0
+        self.sum_s = 0.0
+        self.min_s = math.inf
+        self.max_s = 0.0
+        self._lock = threading.Lock()
+
+    def _bucket(self, s: float) -> int:
+        if s <= self.lo_s:
+            return 0
+        i = int((math.log10(s) - self._log_lo) * self.bpd)
+        return min(i, len(self.counts) - 1)
+
+    def _edge(self, i: int) -> float:
+        """Lower edge (seconds) of bucket ``i``."""
+        return 10.0 ** (self._log_lo + i / self.bpd)
+
+    def record(self, seconds: float):
+        with self._lock:
+            self.counts[self._bucket(seconds)] += 1
+            self.n += 1
+            self.sum_s += seconds
+            self.min_s = min(self.min_s, seconds)
+            self.max_s = max(self.max_s, seconds)
+
+    def record_many(self, seconds_list):
+        for s in seconds_list:
+            self.record(float(s))
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other`` into self (grids must match)."""
+        assert (self.lo_s, self.hi_s, self.bpd) == (
+            other.lo_s, other.hi_s, other.bpd
+        ), "histogram grids differ"
+        with self._lock:
+            for i, c in enumerate(other.counts):
+                self.counts[i] += c
+            self.n += other.n
+            self.sum_s += other.sum_s
+            self.min_s = min(self.min_s, other.min_s)
+            self.max_s = max(self.max_s, other.max_s)
+        return self
+
+    def percentile(self, q: float) -> float:
+        """Seconds at quantile ``q`` in [0, 100], interpolated within the
+        winning bucket (0.0 when empty)."""
+        if self.n == 0:
+            return 0.0
+        rank = q / 100.0 * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c and seen + c >= rank:
+                frac = (rank - seen) / c
+                lo, hi = self._edge(i), self._edge(i + 1)
+                return min(max(lo + frac * (hi - lo), self.min_s),
+                           self.max_s)
+            seen += c
+        return self.max_s
+
+    @property
+    def mean_s(self) -> float:
+        return self.sum_s / self.n if self.n else 0.0
+
+    def summary_ms(self) -> Dict[str, float]:
+        """The tail-latency row every bench emits: p50/p99/p99.9 (+mean,
+        max) in milliseconds."""
+        return {
+            "n": self.n,
+            "mean_ms": self.mean_s * 1e3,
+            "p50_ms": self.percentile(50) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+            "p999_ms": self.percentile(99.9) * 1e3,
+            "max_ms": (self.max_s if self.n else 0.0) * 1e3,
+        }
 
 INDEX_CLASSES = {}
 

@@ -14,6 +14,9 @@ Sections:
   rl_tuning          — Section 4 self-tuning agent vs fixed policies
   self_tuning        — online tuning subsystem vs fixed policies under a
                        mid-run distribution shift (ISSUE 2 acceptance)
+  gateway            — async request gateway: closed-loop tail latency vs
+                       offered load, batched vs batch-size-1 passthrough
+                       (ISSUE 7 acceptance)
   pipeline_index     — UpLIF as the framework's doc index
   kernels            — Pallas kernel micro (interpret mode)
 """
@@ -32,6 +35,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_bmat_types,
+        bench_gateway,
         bench_kernels,
         bench_memory,
         bench_pipeline,
@@ -64,6 +68,12 @@ def main() -> None:
         "self_tuning": lambda: bench_self_tuning.run(
             n_keys=100_000 if q else 200_000, waves=45 if q else 90,
             batch=2048 if q else 4096,
+        ),
+        "gateway": lambda: bench_gateway.run(
+            n_keys=50_000 if q else 100_000,
+            n_clients=4_000 if q else 10_000,
+            loads=(250, 1000, 4000) if q else (250, 1000, 4000, 16000),
+            duration=0.8 if q else 1.2,
         ),
         "pipeline_index": lambda: bench_pipeline.run(
             n_docs=4096 if q else 16384

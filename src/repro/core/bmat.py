@@ -30,15 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.shapes import pow2_at_least as _ceil_pow2  # §7.5 shared quant
 from repro.core.types import BMATState, KEY_MAX, TOMBSTONE
 
 RBMAT = "rbmat"
 BPMAT = "b+mat"
 _MIN_CAP = 4096  # generous floor: halves the compile-on-growth events
-
-
-def _ceil_pow2(n: int) -> int:
-    return 1 << max(int(n - 1).bit_length(), 0)
 
 
 def bmat_height(size: int, tree_type: str, fanout: int) -> int:

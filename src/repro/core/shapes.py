@@ -1,0 +1,60 @@
+"""Power-of-two shape quantization — the §7.5 discipline, in one place.
+
+Every layer that chooses an array dimension or a padded batch width shares
+these helpers, because the whole point of the discipline is that the
+layers AGREE: a jit cache stays at its warmup size only if the router's
+stacked dims, the scheduler's presize jumps, and the gateway's flush
+padding all land on the same small quantized family of shapes. Before
+this module each site re-implemented the ``1 << bit_length`` idiom
+locally (router ``_quant``, BMAT ``_ceil_pow2``, the capacity-growth
+expressions) — one drifting copy would silently re-open the
+compile-on-growth stalls the discipline exists to kill.
+
+The family has three members:
+
+* ``pow2_at_least(n)``   — the next power of two ≥ n (dimension quant);
+* ``bucket_width(n, b)`` — padded batch width: multiples of the bucket
+  above it, next power of two (floor 256) below it;
+* ``padded_width(n, ...)`` — the gateway's flush padding: ALWAYS a power
+  of two (floor/ceiling clamped), so a continuous sweep of offered loads
+  exercises only O(log max_batch) distinct widths.
+
+``bucket_width`` intentionally allows non-power-of-two multiples above
+the bucket — single-tenant bulk callers (the benches) hand the router
+whole tapes whose sizes repeat exactly, so multiples are safe there. A
+LIVE request stream has no repeating sizes; that is why the gateway pads
+with ``padded_width`` *before* the router ever sees the batch.
+"""
+from __future__ import annotations
+
+
+def pow2_at_least(n: int) -> int:
+    """Smallest power of two ≥ ``n`` (and ≥ 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def grow_capacity(need: int) -> int:
+    """Capacity jump for organic growth: the next power of two with 2x
+    headroom over ``need``, so repeated growth is geometric (O(log)
+    reallocation/recompile events over any run)."""
+    return pow2_at_least(2 * max(int(need), 1))
+
+
+def bucket_width(n: int, batch_bucket: int) -> int:
+    """Padded batch width: multiples of ``batch_bucket`` above it, else the
+    next power of two (min 256). Shared by the shell and the shard router
+    so their jit caches bucket identically."""
+    if n >= batch_bucket:
+        return ((n + batch_bucket - 1) // batch_bucket) * batch_bucket
+    return max(256, pow2_at_least(n))
+
+
+def padded_width(n: int, floor: int = 256, ceiling: int | None = None) -> int:
+    """Power-of-two padded width for a live-stream flush: the next power
+    of two ≥ n, clamped to [floor, ceiling]. With a power-of-two floor
+    and ceiling the reachable width set is exactly
+    {floor, 2*floor, ..., ceiling} — the warmup set the gateway primes."""
+    w = max(pow2_at_least(max(int(n), 1)), int(floor))
+    if ceiling is not None:
+        w = min(w, int(ceiling))
+    return w

@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.core import fops
 from repro.core.bmat import BMAT, BPMAT, RBMAT, _make_fences, bmat_height
+from repro.core.shapes import grow_capacity, pow2_at_least
 from repro.core.state import UpLIFState, UpLIFStatic
 from repro.core.types import BMATState, GMMState, KEY_MAX, SlotsState
 from repro.core.uplif import UpLIF, UpLIFConfig, bucket_width
@@ -222,6 +223,52 @@ class _DrainingCommit:
     cuts: Tuple[int, ...]
 
 
+@dataclasses.dataclass
+class MixedWave:
+    """One mixed-op request wave, ready for ``ShardedUpLIF.apply_wave``.
+
+    This is the gateway's dispatch unit (serve/gateway.py): each op kind
+    carries its own batch plus an optional pre-quantized pad width
+    (``pad_*``, a power of two from ``core/shapes.padded_width``). When a
+    pad width is given the router pads to exactly that width instead of
+    the bulk ``bucket_width`` family — a live request stream has no
+    repeating batch sizes, so only the power-of-two family keeps the jit
+    cache at its warmup size. ``None`` fields / empty arrays skip that op
+    kind entirely (no dispatch)."""
+
+    lookup_keys: Optional[np.ndarray] = None
+    insert_keys: Optional[np.ndarray] = None
+    insert_vals: Optional[np.ndarray] = None
+    delete_keys: Optional[np.ndarray] = None
+    range_lo: Optional[np.ndarray] = None
+    range_hi: Optional[np.ndarray] = None
+    pad_lookup: Optional[int] = None
+    pad_insert: Optional[int] = None
+    pad_delete: Optional[int] = None
+    range_max_out: int = 256
+
+    @property
+    def n_ops(self) -> int:
+        return sum(
+            len(a)
+            for a in (self.lookup_keys, self.insert_keys, self.delete_keys,
+                      self.range_lo)
+            if a is not None
+        )
+
+
+@dataclasses.dataclass
+class MixedWaveResult:
+    """Batch-ordered results of one ``apply_wave`` dispatch."""
+
+    lookup_found: Optional[np.ndarray] = None
+    lookup_vals: Optional[np.ndarray] = None
+    delete_hit: Optional[np.ndarray] = None
+    n_overflow: int = 0
+    range_keys: Optional[List[np.ndarray]] = None
+    range_vals: Optional[List[np.ndarray]] = None
+
+
 def _shell_from(
     state: UpLIFState, meta: _ShardMeta, cfg: UpLIFConfig,
     bmat_kind: str, s: int,
@@ -380,7 +427,7 @@ class ShardedUpLIF:
     # -- stacking ------------------------------------------------------------
     @staticmethod
     def _quant(n: int) -> int:
-        return 1 << max(int(n - 1).bit_length(), 0)
+        return pow2_at_least(n)  # §7.5 shared quantization (core/shapes.py)
 
     def _restack(self, shells: List[UpLIF]):
         """Pad every shard's state to common shapes and stack leaf-wise.
@@ -563,12 +610,15 @@ class ShardedUpLIF:
                 res = self._rng.choice(res, cap, replace=False)
             m.reservoir = res
 
-    def _pad_route(self, keys: np.ndarray, *aux):
+    def _pad_route(self, keys: np.ndarray, *aux, width: Optional[int] = None):
         """Pad the batch to a bucketed width — ONE batch for all shards;
         the stacked ops route per query on-device from the boundaries, so
-        the host does exactly what the single-shard shell does."""
+        the host does exactly what the single-shard shell does. ``width``
+        overrides the bucket (the gateway passes its power-of-two flush
+        width so live-stream dispatches reuse the warmup jit variants)."""
         n = len(keys)
-        B = self._bucket(max(n, 1))
+        B = self._bucket(max(n, 1)) if width is None else int(width)
+        assert B >= n, f"pad width {B} below batch size {n}"
         q = np.full(B, KEY_MAX, dtype=np.int64)
         q[:n] = keys
         outs = []
@@ -579,9 +629,11 @@ class ShardedUpLIF:
         return jnp.asarray(q), n, *outs
 
     # -- queries ---------------------------------------------------------------
-    def lookup(self, queries: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def lookup(
+        self, queries: np.ndarray, pad_to: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.int64)
-        q, n = self._pad_route(queries)
+        q, n = self._pad_route(queries, width=pad_to)
         state, _, jb, static = self._read_view()
         f, v = fops.slookup(state, q, jb, static=static)
         self.n_lookups += n
@@ -601,7 +653,12 @@ class ShardedUpLIF:
                 (kind, keys[m], vals[m] if vals is not None else None)
             )
 
-    def insert(self, keys: np.ndarray, vals: Optional[np.ndarray] = None) -> int:
+    def insert(
+        self,
+        keys: np.ndarray,
+        vals: Optional[np.ndarray] = None,
+        pad_to: Optional[int] = None,
+    ) -> int:
         keys = np.asarray(keys, dtype=np.int64)
         if vals is None:
             vals = keys.copy()
@@ -611,7 +668,7 @@ class ShardedUpLIF:
         if self._logs:
             self._log_op("insert", keys, vals)
         self._observe_updates(keys)
-        q, n, vm = self._pad_route(keys, vals)
+        q, n, vm = self._pad_route(keys, vals, width=pad_to)
         self._ensure_bmat_capacity(int(q.shape[0]))
         state, res = fops.sinsert(
             self.state, q, vm, self._jbounds, static=self._static()
@@ -620,11 +677,13 @@ class ShardedUpLIF:
             self.state = state
         return int(res.n_overflow)
 
-    def delete(self, keys: np.ndarray) -> np.ndarray:
+    def delete(
+        self, keys: np.ndarray, pad_to: Optional[int] = None
+    ) -> np.ndarray:
         keys = np.asarray(keys, dtype=np.int64)
         if self._logs:
             self._log_op("delete", keys, None)
-        q, n = self._pad_route(keys)
+        q, n = self._pad_route(keys, width=pad_to)
         state, hit = fops.sdelete(self.state, q, self._jbounds, static=self._static())
         with self._lock:
             self.state = state
@@ -685,6 +744,34 @@ class ShardedUpLIF:
                 out_v.append(np.zeros(0, dtype=np.int64))
         return out_k, out_v
 
+    def apply_wave(self, wave: MixedWave) -> MixedWaveResult:
+        """Dispatch one mixed-op wave (the gateway's flush unit).
+
+        Op kinds execute in the canonical wave order **inserts → deletes →
+        lookups → ranges**: writes land before reads, so a client whose
+        write future resolved in ANY earlier wave — and one whose write
+        rides in this very wave — observes it (read-your-writes through
+        the gateway; pinned by tests/test_gateway.py). Each op kind is one
+        jitted dispatch at its ``pad_*`` width; empty kinds cost nothing."""
+        res = MixedWaveResult()
+        if wave.insert_keys is not None and len(wave.insert_keys):
+            res.n_overflow = self.insert(
+                wave.insert_keys, wave.insert_vals, pad_to=wave.pad_insert
+            )
+        if wave.delete_keys is not None and len(wave.delete_keys):
+            res.delete_hit = self.delete(
+                wave.delete_keys, pad_to=wave.pad_delete
+            )
+        if wave.lookup_keys is not None and len(wave.lookup_keys):
+            res.lookup_found, res.lookup_vals = self.lookup(
+                wave.lookup_keys, pad_to=wave.pad_lookup
+            )
+        if wave.range_lo is not None and len(wave.range_lo):
+            res.range_keys, res.range_vals = self.range_query_batch(
+                wave.range_lo, wave.range_hi, max_out=wave.range_max_out
+            )
+        return res
+
     def adjusted_predict(self, queries: np.ndarray) -> np.ndarray:
         """Global logical rank = shard-local rank + total live keys in the
         shards left of the owning shard."""
@@ -709,7 +796,7 @@ class ShardedUpLIF:
         need = int(sizes.max()) + incoming
         if need <= bcap - 1:
             return
-        new_cap = 1 << max(int(2 * need).bit_length(), 0)
+        new_cap = grow_capacity(need)
         keys, vals, fences = _vgrow_bmat(
             self.state.bmat.keys,
             self.state.bmat.vals,
@@ -1118,7 +1205,7 @@ class ShardedUpLIF:
         need = int(per_shard_capacity)
         if need <= bcap:
             return False
-        new_cap = 1 << max((need - 1).bit_length(), 0)
+        new_cap = pow2_at_least(need)
         keys, vals, fences = _vgrow_bmat(
             self.state.bmat.keys,
             self.state.bmat.vals,

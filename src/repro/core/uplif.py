@@ -33,7 +33,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fops
+from repro.core import fops, shapes
 from repro.core.bmat import BMAT, BPMAT
 from repro.core.gmm import fit_gmm, gmm_memory_bytes, init_gmm_uniform
 from repro.core.nullifier import nullify
@@ -79,13 +79,10 @@ class UpLIFConfig:
         assert self.locate in LOCATE_STRATEGIES + (LOCATE_AUTO,)
 
 
-def bucket_width(n: int, batch_bucket: int) -> int:
-    """Padded batch width: multiples of ``batch_bucket`` above it, else the
-    next power of two (min 256). Shared by the shell and the shard router so
-    their jit caches bucket identically."""
-    if n >= batch_bucket:
-        return ((n + batch_bucket - 1) // batch_bucket) * batch_bucket
-    return max(256, 1 << max(int(n - 1).bit_length(), 0))
+# Re-exported from the shared §7.5 quantization module (core/shapes.py) —
+# the shell, the shard router and the serving gateway must bucket
+# identically or their jit caches diverge.
+bucket_width = shapes.bucket_width
 
 
 class UpLIF:

@@ -1,3 +1,15 @@
-from repro.serve.engine import ServeEngine, PrefixCacheIndex
+from repro.serve.admission import AdmissionController, RetryAfter
+from repro.serve.engine import PrefixCacheIndex, ServeEngine
+from repro.serve.gateway import GatewayConfig, RequestGateway
+from repro.serve.queues import GatewayClosed, RequestFuture
 
-__all__ = ["ServeEngine", "PrefixCacheIndex"]
+__all__ = [
+    "AdmissionController",
+    "GatewayClosed",
+    "GatewayConfig",
+    "PrefixCacheIndex",
+    "RequestFuture",
+    "RequestGateway",
+    "RetryAfter",
+    "ServeEngine",
+]

@@ -10,6 +10,7 @@ run batched once per admission wave.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -20,6 +21,7 @@ import numpy as np
 from repro.core.sharded import ShardedUpLIF
 from repro.core.uplif import UpLIFConfig
 from repro.models.transformer import decode_step, forward_lm, init_cache
+from repro.serve.gateway import GatewayConfig, RequestGateway
 from repro.tuning import SelfTuner
 
 _MASK = (1 << 52) - 1
@@ -87,6 +89,9 @@ class PrefixCacheIndex:
         self.tuner = tuner.attach(self.index) if tuner is not None else None
         self._wave_ops = 0
         self._wave_t0 = time.perf_counter()
+        self._gateway: Optional[RequestGateway] = None
+        self._closed = False
+        self._close_lock = threading.Lock()
 
     def maintain(self):
         """End-of-wave hook: report measured wave throughput to the tuner,
@@ -100,12 +105,44 @@ class PrefixCacheIndex:
         self._wave_t0 = time.perf_counter()
         return rec
 
+    def open_gateway(
+        self, config: Optional[GatewayConfig] = None
+    ) -> RequestGateway:
+        """Attach (or return the already-open) async request gateway over
+        this index's router. The gateway's flusher becomes the router's
+        single writer — don't interleave direct match()/admit() waves with
+        live gateway traffic. The gateway shares the index's tuner, so
+        admission-control pressure sheds the SAME maintenance budget."""
+        with self._close_lock:
+            if self._closed:
+                raise RuntimeError("index is closed")
+            if self._gateway is None or self._gateway.closed:
+                self._gateway = RequestGateway(
+                    self.index, tuner=self.tuner, config=config
+                )
+            return self._gateway
+
     def close(self):
-        """Land in-flight builds, persist learned Q-tables, stop the
-        executor thread. Idempotent."""
-        if self.tuner is not None:
-            self.tuner.drain()
-            self.tuner.close()
+        """Drain the gateway (if open), land in-flight builds, persist
+        learned Q-tables, stop the executor thread.
+
+        Idempotent AND safe to call concurrently — with other closers and
+        with in-flight gateway flushes: the first caller drains everything
+        exactly once while later/concurrent callers serialize behind it;
+        every already-queued gateway future completes (or fails with
+        ``GatewayClosed``), never hangs; submissions racing the close get
+        ``GatewayClosed``."""
+        with self._close_lock:
+            if self._closed:
+                return
+            self._closed = True
+            if self._gateway is not None:
+                # joins the flusher: after this, no thread touches the
+                # tuner or the router, so the tuner teardown below is safe
+                self._gateway.close()
+                self._gateway = None
+            if self.tuner is not None:
+                self.tuner.close()
 
     def match(self, fps: np.ndarray) -> Tuple[int, int]:
         """Longest cached prefix whose slot is still resident: returns
@@ -199,7 +236,15 @@ class ServeEngine:
             lambda p, tok, cache: decode_step(p, cfg, tok, cache)
         )
 
+    def open_gateway(
+        self, config: Optional[GatewayConfig] = None
+    ) -> RequestGateway:
+        """Async ingestion front end over the engine's prefix index (see
+        ``PrefixCacheIndex.open_gateway``)."""
+        return self.prefix_index.open_gateway(config)
+
     def close(self):
+        """Idempotent; safe concurrently with in-flight gateway flushes."""
         self.prefix_index.close()
 
     def _prefill(self, prompt: np.ndarray):

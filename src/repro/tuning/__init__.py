@@ -159,6 +159,12 @@ class SelfTuner:
         """Feed measured range-scan latency into telemetry (reward input)."""
         self.telemetry.observe_range(n_queries, seconds)
 
+    def set_pressure(self, level: int):
+        """Gateway overload ladder (DESIGN.md §9): pressure ≥ 1 sheds
+        maintenance before any client request is rejected or delayed."""
+        if self.scheduler is not None:
+            self.scheduler.set_pressure(level)
+
     def after_wave(self, n_ops: int, seconds: float) -> Optional[dict]:
         """Report a finished request wave; maybe plan one maintenance step."""
         if self.scheduler is None or self.index is None:
@@ -246,6 +252,8 @@ class SelfTuner:
             "commit_replay_cap": (
                 sched.cfg.commit_replay_cap if sched else None
             ),
+            "pressure": sched.pressure if sched else 0,
+            "shed_waves": sched.n_shed_waves if sched else 0,
             "plans": sched.n_planned if sched else 0,
             "commits": sched.n_committed if sched else 0,
             "drained": sched.n_drained if sched else 0,

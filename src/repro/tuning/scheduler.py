@@ -104,6 +104,11 @@ class SchedulerConfig:
     # the serving-path cost of a commit like any other wave op.
     commit_replay_cap: Optional[int] = None
     max_drain_waves: int = 64      # force-finish a drain stuck this long
+    # load-shedding (gateway overload ladder, DESIGN.md §9): while the
+    # serving front end reports pressure ≥ 1 the drains advance at
+    # commit_replay_cap / shed_drain_divisor per wave — maintenance slows
+    # BEFORE any client request is rejected or delayed.
+    shed_drain_divisor: int = 4
 
 
 class MaintenanceScheduler:
@@ -150,6 +155,12 @@ class MaintenanceScheduler:
         self._drain_spent: Dict[int, float] = {}
         self._next_plan_id = 0
         self._stale_plan_ids: set = set()  # abandoned; late results dropped
+        # gateway overload ladder (set_pressure): 0 = normal; ≥1 = shed
+        # maintenance (no new plan admission, no budget refill, slowed
+        # drains). Forced capacity guards still run — shedding must never
+        # trade overload for a mid-wave reallocation stall.
+        self.pressure = 0
+        self.n_shed_waves = 0
         self.n_planned = 0
         self.n_committed = 0           # commits accepted (incl. draining)
         self.n_drained = 0             # paced commits that completed a drain
@@ -160,6 +171,20 @@ class MaintenanceScheduler:
     # -- bookkeeping ---------------------------------------------------------
     def observe_inserts(self, n: int):
         self._insert_ewma = 0.75 * self._insert_ewma + 0.25 * float(n)
+
+    def set_pressure(self, level: int):
+        """Load-shedding hook for the request gateway (DESIGN.md §9): the
+        admission controller reports its overload level before each wave's
+        maintenance step. At pressure ≥ 1 the scheduler sheds maintenance
+        FIRST — new plan admission pauses, the token bucket stops
+        refilling (maintenance earns budget only from waves served while
+        the front end is healthy — the budget-sharing contract), and
+        draining commits advance at a reduced replay cap — so client
+        requests are rejected or delayed only after maintenance has
+        already been pushed off the serving path. Forced absorbs and
+        presize guards still run: capacity debt is the one thing more
+        expensive than overload."""
+        self.pressure = int(level)
 
     def _estimated_cost(self, a: int) -> float:
         return self._cost_est.get(a, 0.05)  # optimistic until measured
@@ -226,6 +251,8 @@ class MaintenanceScheduler:
         worker slot is free, its key interval is disjoint from every
         in-flight build AND draining commit, and (unless forced) its cost
         estimate fits the unreserved budget."""
+        if self.pressure >= 1 and not forced:
+            return False  # shed: overloaded front end — no new builds
         if len(self._inflight) >= self.cfg.max_concurrent_builds and (
             self.executor is not None
         ):
@@ -370,6 +397,10 @@ class MaintenanceScheduler:
                 if age > self.cfg.max_drain_waves
                 else self.cfg.commit_replay_cap
             )
+            if cap is not None and self.pressure >= 1:
+                # shed: slow drain advancement while the gateway is
+                # overloaded (the escape hatch above still bounds lifetime)
+                cap = max(cap // max(self.cfg.shed_drain_divisor, 1), 1)
             d0 = time.perf_counter()
             completed = index.advance_drain(bid, cap)
             dt = time.perf_counter() - d0
@@ -448,10 +479,13 @@ class MaintenanceScheduler:
         Returns the action record when a decision was made, else None.
         """
         self.telemetry.observe_wave(n_ops, seconds)
-        self._budget = min(
-            self._budget + max(seconds, 0.0) * self.cfg.budget_fraction,
-            self.cfg.max_budget_s,
-        )
+        if self.pressure < 1:
+            self._budget = min(
+                self._budget + max(seconds, 0.0) * self.cfg.budget_fraction,
+                self.cfg.max_budget_s,
+            )
+        else:
+            self.n_shed_waves += 1
         self._wave += 1
         decide = self._wave % self.cfg.decide_every == 0
 
@@ -558,7 +592,9 @@ class MaintenanceScheduler:
                     index, self._make_plan(a, s_apply, forced)
                 )
         elif a == A_SWITCH_BMAT:
-            if self._inflight or index.active_intervals():
+            if self.pressure >= 1:
+                a, deferred = A_KEEP, True  # shed: no structural changes
+            elif self._inflight or index.active_intervals():
                 # the switch revises the WHOLE keyspace: it would void
                 # every in-flight build and draining commit
                 a, deferred = A_KEEP, True
@@ -588,6 +624,7 @@ class MaintenanceScheduler:
             "presized": presized,
             "committed": committed,
             "drained": drained,
+            "pressure": self.pressure,
             "draining": len(index.draining_builds()),
             "replayed_ops": index.n_replayed_ops - replayed0,
             "inflight": len(self._inflight),
