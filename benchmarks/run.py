@@ -17,6 +17,9 @@ Sections:
   gateway            — async request gateway: closed-loop tail latency vs
                        offered load, batched vs batch-size-1 passthrough
                        (ISSUE 7 acceptance)
+  locate_sweep       — binsearch/spline/fused locate strategies, fused
+                       under persistent vs per-call (hi, lo) key
+                       decomposition (ISSUE 8 acceptance)
   pipeline_index     — UpLIF as the framework's doc index
   kernels            — Pallas kernel micro (interpret mode)
 """
@@ -74,6 +77,9 @@ def main() -> None:
             n_clients=4_000 if q else 10_000,
             loads=(250, 1000, 4000) if q else (250, 1000, 4000, 16000),
             duration=0.8 if q else 1.2,
+        ),
+        "locate_sweep": lambda: bench_throughput.run_locate_sweep(
+            n_keys=100_000 if q else 200_000, n_iters=7 if q else 11
         ),
         "pipeline_index": lambda: bench_pipeline.run(
             n_docs=4096 if q else 16384

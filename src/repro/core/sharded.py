@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -56,9 +57,10 @@ import numpy as np
 from repro.core import fops
 from repro.core.bmat import BMAT, BPMAT, RBMAT, _make_fences, bmat_height
 from repro.core.shapes import grow_capacity, pow2_at_least
-from repro.core.state import UpLIFState, UpLIFStatic
+from repro.core.state import UpLIFState, UpLIFStatic, make_halves, resolve_locate
 from repro.core.types import BMATState, GMMState, KEY_MAX, SlotsState
 from repro.core.uplif import UpLIF, UpLIFConfig, bucket_width
+from repro.kernels.ops import on_tpu, split_key
 
 
 # --------------------------------------------------------------------------
@@ -70,26 +72,38 @@ from repro.core.uplif import UpLIF, UpLIFConfig, bucket_width
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("static", "max_out"))
-def _vrange(state, lo, hi, *, static, max_out):
+@functools.partial(jax.jit, static_argnames=("statics", "max_out"))
+def _vrange(state, lo, hi, *, statics, max_out):
+    """Per-shard range scans, unrolled in one program. ``statics`` is a
+    length-S tuple so each shard's scan runs under its OWN locate strategy
+    (the per-shard dispatch axis); uniform routers pass S identical
+    entries, which hash to the same jit variant as before. Variant growth
+    is bounded by the distinct strategy assignments actually used — the
+    controller flips a shard's strategy rarely (it is a learned action),
+    and results are byte-identical across strategies regardless."""
     S = jax.tree_util.tree_leaves(state)[0].shape[0]
     outs = [
         fops.range_scan(
             jax.tree_util.tree_map(lambda x: x[s], state),
-            lo[s], hi[s], static=static, max_out=max_out,
+            lo[s], hi[s], static=statics[s], max_out=max_out,
         )
         for s in range(S)
     ]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
 
-@functools.partial(jax.jit, static_argnames=("fanout", "pad"))
-def _vgrow_bmat(keys, vals, *, fanout, pad):
-    """Grow every shard's BMAT by ``pad`` KEY_MAX slots (stacked axis 1)."""
+@functools.partial(jax.jit, static_argnames=("fanout", "pad", "with_halves"))
+def _vgrow_bmat(keys, vals, *, fanout, pad, with_halves=False):
+    """Grow every shard's BMAT by ``pad`` KEY_MAX slots (stacked axis 1).
+    With ``with_halves`` the refreshed (hi, lo) decomposition of the grown
+    keys/fences comes back too, so callers carrying a persistent
+    ``state.halves`` keep it consistent without a separate device pass."""
     keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=KEY_MAX)
     vals = jnp.pad(vals, ((0, 0), (0, pad)))
     fences = jax.vmap(lambda k: _make_fences(k, fanout))(keys)
-    return keys, vals, fences
+    if with_halves:
+        return keys, vals, fences, split_key(keys) + split_key(fences)
+    return keys, vals, fences, None
 
 
 @dataclasses.dataclass
@@ -290,6 +304,10 @@ def _shell_from(
     sh._rng = np.random.default_rng(s)
     sh.n_lookups = 0
     sh.n_retrains = 0
+    # seed the shell's halves cache with the stacked row's slice — the
+    # identity anchor makes any later array swap rebuild it automatically
+    sh._halves = st.halves
+    sh._halves_src = sh._halves_sources() if st.halves is not None else None
     return sh
 
 
@@ -422,6 +440,16 @@ class ShardedUpLIF:
         self._drains: Dict[int, _DrainingCommit] = {}
         self._revisions: List[Tuple[int, int, int]] = []  # (ordinal, lo, hi)
         self._next_build_id = 0
+        # -- per-shard locate-strategy axis --------------------------------
+        # every shard starts on the resolved config strategy; the telemetry-
+        # driven controller flips individual shards via set_shard_locate.
+        # _locate_value/_jcodes are the cached dispatch form consumed by
+        # _static()/_read_view() (see _set_locate_axis).
+        self._locate_per_shard: List[str] = (
+            [resolve_locate(self.cfg.locate, on_tpu())] * self.n_shards
+        )
+        self._locate_obs: List[Tuple[np.ndarray, float, Tuple[str, ...]]] = []
+        self._set_locate_axis()
         self._restack(shells)
 
     # -- stacking ------------------------------------------------------------
@@ -514,8 +542,14 @@ class ShardedUpLIF:
             fences=_make_fences(bkeys, self.cfg.bmat_fanout),
             size=st.bmat.size,
         )
+        # padded arrays are NEW arrays, so the shell's cached halves (if
+        # any) do not cover the pads — rebuild the row's decomposition from
+        # the padded sources to keep the split-of-source invariant exact
+        halves = (
+            make_halves(slots, model, bmat) if st.halves is not None else None
+        )
         return UpLIFState(slots=slots, model=model, bmat=bmat,
-                          counters=st.counters)
+                          counters=st.counters, halves=halves)
 
     def _write_shard(self, s: int, sh: UpLIF) -> bool:
         """Fast path for single-shard maintenance: when the rebuilt shard
@@ -554,13 +588,66 @@ class ShardedUpLIF:
             self.state, self._meta[s], self.cfg, self.bmat_kind, s
         )
 
-    def _static(self) -> UpLIFStatic:
-        # resolve cfg.locate ("auto" -> fused on TPU / spline elsewhere)
-        # exactly like the shard shells do, so router ops and host-side
-        # maintenance replay run the same strategy
-        from repro.core.state import resolve_locate
-        from repro.kernels.ops import on_tpu
+    # -- per-shard locate dispatch ---------------------------------------------
+    def _set_locate_axis(self):
+        """Refresh the cached dispatch form of ``_locate_per_shard``.
 
+        ``_locate_value`` is what ``_static().locate`` carries: the single
+        strategy string when the assignment is uniform (the common case —
+        identical jit variants to a strategy-less router), else the SORTED
+        tuple of distinct strategies in play, so the static universe stays
+        inside the ≤7-value family regardless of which shard runs what.
+        ``_jcodes`` is the traced companion: per-shard int32 indices into
+        that tuple (None when uniform). Callers mutate ``_locate_per_shard``
+        under the lock and call this before releasing it."""
+        distinct = sorted(set(self._locate_per_shard))
+        if len(distinct) == 1:
+            self._locate_value = distinct[0]
+            self._jcodes = None
+        else:
+            self._locate_value = tuple(distinct)
+            pos = {strat: i for i, strat in enumerate(distinct)}
+            self._jcodes = jnp.asarray(
+                np.asarray(
+                    [pos[s] for s in self._locate_per_shard], dtype=np.int32
+                )
+            )
+
+    def set_shard_locate(self, s: int, strategy: str) -> bool:
+        """Pin shard ``s``'s locate strategy (the controller's
+        switch-locate action). Metadata-only: no state arrays move and the
+        strategy never changes what a query returns (the three strategies
+        are byte-identical by the equivalence contract), so — unlike
+        ``switch_bmat_type`` — this records NO revision and needs no
+        in-flight-build veto. Returns True when the assignment changed."""
+        assert 0 <= s < self.n_shards
+        strategy = resolve_locate(strategy, on_tpu())
+        with self._lock:
+            if self._locate_per_shard[s] == strategy:
+                return False
+            self._locate_per_shard[s] = strategy
+            self._set_locate_axis()
+        return True
+
+    def shard_locate(self) -> Tuple[str, ...]:
+        """Current per-shard strategy assignment (telemetry snapshot input)."""
+        with self._lock:
+            return tuple(self._locate_per_shard)
+
+    def drain_locate_obs(
+        self,
+    ) -> List[Tuple[np.ndarray, float, Tuple[str, ...]]]:
+        """Hand the accumulated (per-shard query counts, wall seconds,
+        strategy assignment) lookup observations to the telemetry layer
+        and reset the buffer."""
+        with self._lock:
+            obs, self._locate_obs = self._locate_obs, []
+        return obs
+
+    def _static(self) -> UpLIFStatic:
+        # cfg.locate is resolved per shard at init/set_shard_locate time
+        # ("auto" -> fused on TPU / spline elsewhere), so router ops and
+        # host-side maintenance replay run the same strategies
         return UpLIFStatic(
             window=self.cfg.window,
             movement_k=self.cfg.movement_k,
@@ -568,19 +655,22 @@ class ShardedUpLIF:
             insert_rounds=self.cfg.insert_rounds,
             fanout=self.cfg.bmat_fanout,
             bmat_kind=self.bmat_kind,
-            locate=resolve_locate(self.cfg.locate, on_tpu()),
+            locate=self._locate_value,
         )
 
     def _read_view(self):
-        """One consistent (state, boundaries, jbounds, static) quadruple.
+        """One consistent (state, boundaries, jbounds, codes, static) view.
 
         Readers on other threads race the commit swap only at reference
-        granularity: grabbing all four under the swap lock guarantees the
-        static/boundary metadata matches the pytree generation, so a lookup
-        issued mid-commit runs entirely against either the old or the new
-        state — never a mix (the torn-read stress test pins this)."""
+        granularity: grabbing all five under the swap lock guarantees the
+        static/boundary/strategy metadata matches the pytree generation, so
+        a lookup issued mid-commit runs entirely against either the old or
+        the new state — never a mix (the torn-read stress test pins this)."""
         with self._lock:
-            return self.state, self.boundaries, self._jbounds, self._static()
+            return (
+                self.state, self.boundaries, self._jbounds, self._jcodes,
+                self._static(),
+            )
 
     # -- routing ---------------------------------------------------------------
     def _route(self, keys: np.ndarray) -> np.ndarray:
@@ -634,10 +724,26 @@ class ShardedUpLIF:
     ) -> Tuple[np.ndarray, np.ndarray]:
         queries = np.asarray(queries, dtype=np.int64)
         q, n = self._pad_route(queries, width=pad_to)
-        state, _, jb, static = self._read_view()
-        f, v = fops.slookup(state, q, jb, static=static)
+        state, boundaries, jb, codes, static = self._read_view()
+        t0 = time.perf_counter()
+        f, v = fops.slookup(state, q, jb, codes, static=static)
+        f, v = np.asarray(f), np.asarray(v)  # sync: time the whole dispatch
+        dt = time.perf_counter() - t0
         self.n_lookups += n
-        return np.asarray(f)[:n], np.asarray(v)[:n]
+        if n:
+            # per-shard latency attribution for the locate-strategy
+            # controller: one searchsorted + bincount per dispatch is the
+            # whole host cost of the telemetry feed
+            counts = np.bincount(
+                np.searchsorted(boundaries, queries[:n], side="right"),
+                minlength=len(boundaries) + 1,
+            )
+            with self._lock:
+                if len(self._locate_obs) < 1024:  # bounded between drains
+                    self._locate_obs.append(
+                        (counts, dt, tuple(self._locate_per_shard))
+                    )
+        return f[:n], v[:n]
 
     def _log_op(
         self, kind: str, keys: np.ndarray, vals: Optional[np.ndarray]
@@ -671,7 +777,8 @@ class ShardedUpLIF:
         q, n, vm = self._pad_route(keys, vals, width=pad_to)
         self._ensure_bmat_capacity(int(q.shape[0]))
         state, res = fops.sinsert(
-            self.state, q, vm, self._jbounds, static=self._static()
+            self.state, q, vm, self._jbounds, self._jcodes,
+            static=self._static(),
         )
         with self._lock:
             self.state = state
@@ -684,7 +791,10 @@ class ShardedUpLIF:
         if self._logs:
             self._log_op("delete", keys, None)
         q, n = self._pad_route(keys, width=pad_to)
-        state, hit = fops.sdelete(self.state, q, self._jbounds, static=self._static())
+        state, hit = fops.sdelete(
+            self.state, q, self._jbounds, self._jcodes,
+            static=self._static(),
+        )
         with self._lock:
             self.state = state
         return np.asarray(hit)[:n]
@@ -707,8 +817,16 @@ class ShardedUpLIF:
         lo = np.asarray(lo, dtype=np.int64)
         hi = np.asarray(hi, dtype=np.int64)
         n = len(lo)
-        state, boundaries, _, static = self._read_view()
+        with self._lock:
+            state, boundaries = self.state, self.boundaries
+            static = self._static()
+            per_shard = tuple(self._locate_per_shard)
         n_shards = len(boundaries) + 1
+        # range scans unroll per shard, so mixed dispatch is just each
+        # shard's scan compiled under its own (uniform) strategy
+        statics = tuple(
+            static._replace(locate=per_shard[s]) for s in range(n_shards)
+        )
         edges = np.concatenate([[0], boundaries, [KEY_MAX]])
         picks = [
             np.nonzero((hi >= edges[s]) & (lo < edges[s + 1]))[0]
@@ -722,7 +840,7 @@ class ShardedUpLIF:
             hi_m[s, : len(p)] = hi[p]
         res = _vrange(
             state, jnp.asarray(lo_m), jnp.asarray(hi_m),
-            static=static, max_out=max_out,
+            statics=statics, max_out=max_out,
         )
         ks = np.asarray(res.keys)
         vs = np.asarray(res.vals)
@@ -776,7 +894,7 @@ class ShardedUpLIF:
         """Global logical rank = shard-local rank + total live keys in the
         shards left of the owning shard."""
         queries = np.asarray(queries, dtype=np.int64)
-        state, boundaries, jb, static = self._read_view()
+        state, boundaries, jb, codes, static = self._read_view()
         # a preceding shard contributes its live in-place keys plus its FULL
         # BMAT entry count — the bias r(k) counts tombstones too, matching
         # the single-shard BMAT rank semantics
@@ -785,7 +903,7 @@ class ShardedUpLIF:
         )
         base = np.concatenate([[0], np.cumsum(sizes)[:-1]])
         q, n = self._pad_route(queries)
-        rank = np.asarray(fops.srank(state, q, jb, static=static))
+        rank = np.asarray(fops.srank(state, q, jb, codes, static=static))
         sid = np.searchsorted(boundaries, queries, side="right")
         return rank[:n] + base[sid]
 
@@ -797,18 +915,26 @@ class ShardedUpLIF:
         if need <= bcap - 1:
             return
         new_cap = grow_capacity(need)
-        keys, vals, fences = _vgrow_bmat(
+        keys, vals, fences, bh = _vgrow_bmat(
             self.state.bmat.keys,
             self.state.bmat.vals,
             fanout=self.cfg.bmat_fanout,
             pad=new_cap - bcap,
+            with_halves=self.state.halves is not None,
         )
         with self._lock:
+            halves = self.state.halves
+            if bh is not None:
+                halves = halves._replace(
+                    bmat_hi=bh[0], bmat_lo=bh[1],
+                    fence_hi=bh[2], fence_lo=bh[3],
+                )
             self.state = self.state._replace(
                 bmat=BMATState(
                     keys=keys, vals=vals, fences=fences,
                     size=self.state.bmat.size,
-                )
+                ),
+                halves=halves,
             )
 
     # -- versioned-state protocol (plan/build/commit; DESIGN.md §8) ------------
@@ -1075,6 +1201,9 @@ class ShardedUpLIF:
                 self._jbounds = jnp.asarray(self.boundaries)
                 self.n_shards += 1
                 self.n_splits += 1
+                # both halves inherit the split shard's locate strategy
+                self._locate_per_shard.insert(s, self._locate_per_shard[s])
+                self._set_locate_axis()
                 self._restack(live[:s] + list(shells) + live[s + 1:])
         elif delta.kind == "merge":
             live = [self._unstack_shell(i) for i in range(self.n_shards)]
@@ -1083,6 +1212,9 @@ class ShardedUpLIF:
                 self._jbounds = jnp.asarray(self.boundaries)
                 self.n_shards -= 1
                 self.n_merges += 1
+                # the merged shard keeps the left member's strategy
+                del self._locate_per_shard[s + 1]
+                self._set_locate_axis()
                 self._restack(live[:s] + list(shells) + live[s + 2:])
         else:
             raise ValueError(f"unknown delta kind: {delta.kind}")
@@ -1165,6 +1297,8 @@ class ShardedUpLIF:
             self._jbounds = jnp.asarray(self.boundaries)
             self.n_shards += 1
             self.n_splits += 1
+            self._locate_per_shard.insert(s, self._locate_per_shard[s])
+            self._set_locate_axis()
             self._restack(shells[:s] + [left, right] + shells[s + 1:])
             self._record_revision(lo, hi)
         return True
@@ -1192,6 +1326,8 @@ class ShardedUpLIF:
             self._jbounds = jnp.asarray(self.boundaries)
             self.n_shards -= 1
             self.n_merges += 1
+            del self._locate_per_shard[s + 1]
+            self._set_locate_axis()
             self._restack(shells[:s] + [merged] + shells[s + 2:])
             self._record_revision(lo, hi)
         return True
@@ -1206,18 +1342,26 @@ class ShardedUpLIF:
         if need <= bcap:
             return False
         new_cap = pow2_at_least(need)
-        keys, vals, fences = _vgrow_bmat(
+        keys, vals, fences, bh = _vgrow_bmat(
             self.state.bmat.keys,
             self.state.bmat.vals,
             fanout=self.cfg.bmat_fanout,
             pad=new_cap - bcap,
+            with_halves=self.state.halves is not None,
         )
         with self._lock:
+            halves = self.state.halves
+            if bh is not None:
+                halves = halves._replace(
+                    bmat_hi=bh[0], bmat_lo=bh[1],
+                    fence_hi=bh[2], fence_lo=bh[3],
+                )
             self.state = self.state._replace(
                 bmat=BMATState(
                     keys=keys, vals=vals, fences=fences,
                     size=self.state.bmat.size,
-                )
+                ),
+                halves=halves,
             )
         return True
 

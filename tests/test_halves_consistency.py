@@ -1,0 +1,175 @@
+"""(hi, lo) decomposition consistency property suite (ISSUE 8 tentpole).
+
+``UpLIFState.halves`` is the persistent decomposition the fused Pallas
+adapters consume without per-call conversion. Its contract is exact:
+after ANY sequence of ops and maintenance, every field is byte-identical
+to a fresh ``kernels.ops.split_key`` of its int64 source array (and
+``spline_pos32`` to a fresh float32 cast). These tests drive random
+op/maintenance tapes — inserts, deletes, retrains, splits, merges,
+capacity growth, versioned commits paused mid-drain — and re-derive the
+decomposition from scratch at every step. A single differing byte means
+the incremental maintenance in ``fops`` (or a host path that swapped
+arrays without refreshing the halves) silently desynchronized, which
+would surface only as wrong fused-lookup results on TPU.
+
+Strategies go through ``tests/_hypothesis_compat``: with hypothesis
+installed each case explores random tapes; without it the deterministic
+boundary grid runs the same oracles.
+"""
+import types
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core  # noqa: F401 — x64
+from repro.core import ShardedUpLIF, UpLIF
+from repro.core.uplif import UpLIFConfig
+from repro.kernels import ops as kops
+from repro.tuning.controller import A_RETRAIN_SHARD
+from repro.tuning.executor import build as build_plan
+from tests._hypothesis_compat import HealthCheck, given, settings, st
+from tests.conftest import make_keys
+
+KEY_HI = 1 << 44
+
+
+def assert_halves_consistent(state, where: str):
+    """The invariant: halves == fresh split of the int64 sources."""
+    h = state.halves
+    assert h is not None, f"{where}: halves missing"
+    pairs = (
+        ("slots", h.slot_hi, h.slot_lo, state.slots.keys),
+        ("spline", h.spline_hi, h.spline_lo, state.model.spline_keys),
+        ("bmat", h.bmat_hi, h.bmat_lo, state.bmat.keys),
+        ("fences", h.fence_hi, h.fence_lo, state.bmat.fences),
+    )
+    for name, hi, lo, src in pairs:
+        ehi, elo = kops.split_key(src)
+        np.testing.assert_array_equal(
+            np.asarray(hi), np.asarray(ehi), err_msg=f"{where}:{name}.hi"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(lo), np.asarray(elo), err_msg=f"{where}:{name}.lo"
+        )
+    np.testing.assert_array_equal(
+        np.asarray(h.spline_pos32),
+        np.asarray(state.model.spline_pos.astype(jnp.float32)),
+        err_msg=f"{where}:spline_pos32",
+    )
+
+
+def _tape(seed: int, n: int = 1400):
+    r = np.random.default_rng(seed)
+    base = make_keys(n, seed, hi=KEY_HI)
+    fresh = np.setdiff1d(r.integers(0, KEY_HI, n).astype(np.int64), base)
+    hot = r.integers(int(base[50]), int(base[90]) + 1, 300).astype(np.int64)
+    return base, [
+        ("insert", fresh[: n // 2]),
+        ("delete", np.concatenate([base[100:220], fresh[:60]])),
+        ("insert", hot),                       # hotspot + tombstone revival
+        ("insert", np.concatenate([hot[:40], hot[:40]])),  # in-batch dups
+        ("delete", hot[::3]),
+    ]
+
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2),
+       locate=st.sampled_from(["spline", "fused"]))
+def test_single_shard_halves_track_ops(seed, locate):
+    base, ops_tape = _tape(seed)
+    idx = UpLIF(base, base * 3, UpLIFConfig(locate=locate))
+    assert_halves_consistent(idx.fstate, "init")
+    for i, (op, keys) in enumerate(ops_tape):
+        if op == "insert":
+            idx.insert(keys, keys + 7)
+        else:
+            idx.delete(keys)
+        assert_halves_consistent(idx.fstate, f"op{i}:{op}")
+    idx.retrain_subset(quantiles=8)
+    assert_halves_consistent(idx.fstate, "retrain_subset")
+    idx.retrain_full()
+    assert_halves_consistent(idx.fstate, "retrain_full")
+
+
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2), n_shards=st.sampled_from([2, 3]))
+def test_router_halves_track_ops_and_maintenance(seed, n_shards):
+    base, ops_tape = _tape(seed)
+    idx = ShardedUpLIF(
+        base, base * 3, UpLIFConfig(batch_bucket=256), n_shards=n_shards
+    )
+    assert_halves_consistent(idx.state, "init")
+    # mixed per-shard strategies while the tape runs: the halves feed the
+    # fused branch of the stacked dispatch, so exercise it mid-maintenance
+    idx.set_shard_locate(0, "fused")
+    for i, (op, keys) in enumerate(ops_tape):
+        if op == "insert":
+            idx.insert(keys, keys + 7)
+        else:
+            idx.delete(keys)
+        assert_halves_consistent(idx.state, f"op{i}:{op}")
+    idx.retrain_shard(0)
+    assert_halves_consistent(idx.state, "retrain_shard")
+    assert idx.split_shard(idx.n_shards - 1)
+    assert_halves_consistent(idx.state, "split_shard")
+    assert idx.merge_shards(0)
+    assert_halves_consistent(idx.state, "merge_shards")
+    # capacity growth rebuilds the stacked BMAT arrays wholesale
+    assert idx.presize_bmat(int(idx.state.bmat.keys.shape[1]) * 2)
+    assert_halves_consistent(idx.state, "presize_bmat")
+    f, _ = idx.lookup(base[::11])
+    assert_halves_consistent(idx.state, "post_lookup")
+
+
+def test_router_halves_survive_commit_mid_drain():
+    """The versioned plan/build/commit path: halves must hold while a
+    paced commit is parked draining (old rows still serving) and after the
+    atomic swap lands the rebuilt shard."""
+    base, ops_tape = _tape(5)
+    idx = ShardedUpLIF(
+        base, base * 3, UpLIFConfig(batch_bucket=256), n_shards=2
+    )
+    snap = idx.snapshot(shards=[0])
+    plan = types.SimpleNamespace(action=A_RETRAIN_SHARD, shard=0, gmm=None)
+    # ops land while the build is in flight -> they go to the rebase log
+    for op, keys in ops_tape[:3]:
+        if op == "insert":
+            idx.insert(keys, keys + 7)
+        else:
+            idx.delete(keys)
+    delta = build_plan(plan, snap)
+    assert idx.commit(delta, replay_cap=8)  # parks: log longer than cap
+    assert idx.draining
+    assert_halves_consistent(idx.state, "mid_drain")
+    idx.insert(base[:64], base[:64] + 9)  # keeps appending to the log
+    assert_halves_consistent(idx.state, "mid_drain_insert")
+    while idx.draining:
+        idx.advance_drains(replay_cap=64)
+    assert_halves_consistent(idx.state, "post_swap")
+    f, v = idx.lookup(base[:64])
+    assert f.all() and np.array_equal(v, base[:64] + 9)
+
+
+def test_persist_halves_off_is_the_baseline():
+    """``persist_halves=False`` is the per-call re-split baseline the
+    locate_sweep bench compares against: no halves anywhere, and results
+    identical to the persistent index."""
+    base, ops_tape = _tape(1, n=900)
+    on = UpLIF(base, base * 3, UpLIFConfig())
+    off = UpLIF(base, base * 3, UpLIFConfig(persist_halves=False))
+    assert off.fstate.halves is None
+    for op, keys in ops_tape:
+        for idx in (on, off):
+            if op == "insert":
+                idx.insert(keys, keys + 7)
+            else:
+                idx.delete(keys)
+    assert off.fstate.halves is None
+    assert_halves_consistent(on.fstate, "on")
+    probes = np.concatenate([base[::5], ops_tape[0][1][::5]])
+    fa, va = on.lookup(probes)
+    fb, vb = off.lookup(probes)
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_array_equal(va, vb)

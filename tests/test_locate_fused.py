@@ -131,6 +131,70 @@ def test_stacked_strategy_equivalence(seed, n_shards):
         _assert_identical(strat, results["spline"], results[strat])
 
 
+@settings(max_examples=4, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 1), assignment=st.sampled_from([
+    ("spline", "binsearch", "fused"),
+    ("fused", "binsearch", "fused"),
+    ("binsearch", "spline", "spline"),
+]))
+def test_mixed_per_shard_strategy_equivalence(seed, assignment):
+    """Per-shard dispatch (ISSUE 8): one wave may run DIFFERENT locate
+    strategies on different shards — a per-query strategy mask partitions
+    the wave across at most three launches, each query taking (j, ins_cap)
+    from its own shard's branch. Every visible result must match the
+    uniform-strategy router on the same tape, shard-boundary keys and
+    mid-tape strategy flips included."""
+    base, vals, ops_tape, probes, ranges = _tape(seed)
+    cfg = UpLIFConfig(locate="spline", batch_bucket=256)
+    ref = ShardedUpLIF(base, vals, cfg, n_shards=3)
+    mixed = ShardedUpLIF(base, vals, cfg, n_shards=3)
+    for s, strat in enumerate(assignment):
+        mixed.set_shard_locate(s, strat)
+    b = ref.boundaries.astype(np.int64)
+    probes_b = np.concatenate([probes, b, b - 1, b + 1])
+    r_ref = _run_tape(ref, ops_tape, probes_b, ranges)
+    r_mix = _run_tape(mixed, ops_tape, probes_b, ranges)
+    _assert_identical(f"mixed{assignment}", r_ref, r_mix)
+    assert ref.size == mixed.size
+    # a controller flip mid-stream must not disturb state or results
+    mixed.set_shard_locate(1, "fused")
+    fa, va = ref.lookup(probes_b)
+    fb, vb = mixed.lookup(probes_b)
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_array_equal(va, vb)
+
+
+def test_mixed_codes_reuse_jit_variants():
+    """Jit-cache flatness (§7.5 shapes discipline): the per-shard strategy
+    CODES are a traced argument — repinning shards within the same
+    distinct-strategy set changes code values, never the trace. Only the
+    sorted deduplicated strategy tuple is static, so controller flips stay
+    inside the warmed pow2 variant family instead of growing the cache per
+    assignment permutation."""
+    from repro.core import fops
+
+    keys = make_keys(900, 3, hi=KEY_HI)
+    cfg = UpLIFConfig(locate="spline", batch_bucket=256)
+    idx = ShardedUpLIF(keys, keys + 1, cfg, n_shards=3)
+    idx.set_shard_locate(0, "binsearch")  # distinct set {binsearch, spline}
+    q = keys[:100]
+    idx.lookup(q)   # warm the mixed variant at this pow2 pad width
+    idx.delete(keys[:0])
+    n0 = fops.slookup._cache_size()
+    nd = fops.sdelete._cache_size()
+    # permute the assignment inside the same distinct set: same static
+    # tuple, same shapes, different code values -> the warmed variants
+    # must serve every one of them
+    for flip in ((0, "spline", 1, "binsearch"), (1, "spline", 2, "binsearch")):
+        idx.set_shard_locate(flip[0], flip[1])
+        idx.set_shard_locate(flip[2], flip[3])
+        idx.lookup(q)
+        idx.delete(keys[:0])
+    assert fops.slookup._cache_size() == n0
+    assert fops.sdelete._cache_size() == nd
+
+
 def test_fused_locate_kernel_is_wired(monkeypatch):
     """The fused strategy must actually route through the Pallas adapters
     (a silent fall-through to the jnp path would pass the equivalence

@@ -10,6 +10,7 @@ from repro.core import ShardedUpLIF
 from repro.core.gmm import e_step, gmm_cdf, gmm_cdf_np, init_gmm_uniform
 from repro.core.uplif import UpLIFConfig
 from repro.tuning import (
+    ACTIONS,
     A_KEEP,
     A_MERGE_SHARDS,
     A_RETRAIN_SHARD,
@@ -237,7 +238,8 @@ def test_controller_masks_follow_sharded_state():
 
 def test_controller_choose_respects_mask():
     ctl = ShardTuningController(ControllerConfig(epsilon=1.0, seed=3))
-    mask = np.array([True, False, True, False, False])
+    mask = np.zeros(len(ACTIONS), dtype=bool)
+    mask[[A_KEEP, A_SWITCH_BMAT]] = True
     for _ in range(50):  # epsilon=1: pure exploration, masked draws only
         a = ctl.choose((0,) * 7, mask)
         assert mask[a]
@@ -253,7 +255,7 @@ def test_controller_choose_respects_mask():
 def test_controller_learning_updates_q():
     ctl = ShardTuningController(ControllerConfig(seed=0))
     s0, s1 = (0,) * 7, (1,) * 7
-    mask = np.ones(5, dtype=bool)
+    mask = np.ones(len(ACTIONS), dtype=bool)
     ctl._q_row(s1)[A_KEEP] = 2.0
     ctl.update(s0, A_RETRAIN_SHARD, 1.0, s1, mask)
     cfg = ctl.cfg
